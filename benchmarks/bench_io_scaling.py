@@ -1,0 +1,51 @@
+"""Paper Table I analogue: I/O bandwidth scales with node count.
+
+Writes a fixed-size distributed state as node-local pmem checkpoints for
+n = 1, 2, 4, 8 nodes and reports aggregate bandwidth; contrast row writes
+the same state through the (bandwidth-throttled) external filesystem —
+the paper's Fig. 4 vs Fig. 5 comparison.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.cluster import SimCluster
+
+STATE_MB = 64
+EXTERNAL_BW = 400e6  # 400 MB/s external PFS per the contrast scenario
+
+
+def _state(mb: int):
+    n = mb * (1 << 20) // 4
+    rows = 1 << 12
+    return {"w": np.random.RandomState(0).randn(rows, n // rows)
+            .astype(np.float32)}
+
+
+def run():
+    rows = []
+    state = _state(STATE_MB)
+    nbytes = sum(a.nbytes for a in state.values())
+    for n_nodes in (1, 2, 4, 8):
+        root = Path(tempfile.mkdtemp(prefix="bench_io_"))
+        c = SimCluster(root, n_nodes=n_nodes, buddy=False)
+        t0 = time.perf_counter()
+        c.checkpointer.save(1, state)
+        dt = time.perf_counter() - t0
+        rows.append((f"pmem_ckpt_{n_nodes}nodes", dt * 1e6 / 1,
+                     f"{nbytes / dt / 1e9:.2f}GB/s"))
+        c.shutdown()
+    # external filesystem path (throttled, single funnel)
+    root = Path(tempfile.mkdtemp(prefix="bench_io_ext_"))
+    c = SimCluster(root, n_nodes=4, buddy=False,
+                   external_bandwidth=EXTERNAL_BW)
+    t0 = time.perf_counter()
+    c.external.put("ckpt_external", state)
+    dt = time.perf_counter() - t0
+    rows.append(("external_fs_ckpt", dt * 1e6, f"{nbytes / dt / 1e9:.2f}GB/s"))
+    c.shutdown()
+    return rows

@@ -1,0 +1,59 @@
+"""Kernel microbenches (CPU: jnp reference paths timed; Pallas kernels run
+in interpret mode for correctness only — wall-clock kernel perf is a TPU
+measurement, the roofline analysis covers the TPU story)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+
+    from repro.models.attention import blockwise_attention, local_attention
+    q = jax.random.normal(ks[0], (1, 1024, 2, 4 * 64)).reshape(1, 1024, 8, 64)
+    k = jax.random.normal(ks[1], (1, 1024, 2, 64))
+    v = jax.random.normal(ks[2], (1, 1024, 2, 64))
+    f1 = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, causal=True))
+    rows.append(("attn_blockwise_1k", _time(f1, q, k, v) * 1e6, "jnp_path"))
+    f2 = jax.jit(lambda q, k, v: local_attention(q, k, v, window=256))
+    t_local = _time(f2, q, k, v)
+    rows.append(("attn_local_w256_1k", t_local * 1e6, "static_window_slices"))
+
+    from repro.models.rglru import rglru_scan
+    log_a = -jnp.abs(jax.random.normal(ks[3], (2, 2048, 256))) * 0.1
+    gated = jax.random.normal(ks[4], (2, 2048, 256))
+    f3 = jax.jit(rglru_scan)
+    rows.append(("rglru_assoc_scan_2k", _time(f3, log_a, gated) * 1e6,
+                 "jnp_path"))
+
+    from repro.models.ssm import ssd_chunked
+    x = jax.random.normal(ks[0], (1, 2048, 8, 64))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 2048, 8)))
+    a = -jnp.exp(jax.random.normal(ks[2], (8,)) * 0.3)
+    bc = jax.random.normal(ks[3], (1, 2048, 1, 128)) * 0.3
+    f4 = jax.jit(lambda *a_: ssd_chunked(*a_, 256))
+    rows.append(("ssd_chunked_2k", _time(f4, x, dt, a, bc, bc) * 1e6,
+                 "jnp_path"))
+
+    from repro.kernels.ckpt_codec.ref import encode_ref
+    import numpy as np
+    new = np.random.randn(1 << 22).astype(np.float32).reshape(-1, 1024)
+    base = new + 0.01 * np.random.randn(*new.shape).astype(np.float32)
+    t0 = time.perf_counter()
+    encode_ref(new, base)
+    rows.append(("ckpt_codec_encode_16MB", (time.perf_counter() - t0) * 1e6,
+                 "numpy_host_path"))
+    return rows

@@ -1,0 +1,43 @@
+"""Burst-buffer staging: prefetch hides external-filesystem latency.
+
+The staged dataset pre-loads upcoming shards into node pmem (paper Fig. 8
+steps 1-3); with prefetch on, per-step stall time collapses to pmem reads.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+from repro.configs import ShapeConfig, get_smoke_config
+from repro.core.cluster import SimCluster
+from repro.data.pipeline import StagedDataset
+
+EXTERNAL_BW = 40e6
+
+
+def _run_one(prefetch: int) -> float:
+    cfg = get_smoke_config("gemma2-9b")
+    shape = ShapeConfig("bench", 512, 8, "train")
+    root = Path(tempfile.mkdtemp())
+    c = SimCluster(root, n_nodes=2, external_bandwidth=EXTERNAL_BW)
+    ds = StagedDataset(c, cfg, shape, n_shards=6, seqs_per_shard=2048,
+                       prefetch=prefetch)
+    t0 = time.perf_counter()
+    n = 0
+    for _ in ds.batches(6):
+        n += 1
+        time.sleep(0.05)  # emulate the compute part of the step
+    dt = time.perf_counter() - t0
+    c.shutdown()
+    return dt / n
+
+
+def run():
+    cold = _run_one(prefetch=0)
+    warm = _run_one(prefetch=3)
+    return [
+        ("staging_no_prefetch_step", cold * 1e6, "stalls_on_external"),
+        ("staging_prefetch3_step", warm * 1e6,
+         f"speedup={cold / warm:.2f}x"),
+    ]

@@ -1,0 +1,45 @@
+"""SLM/DLM modes: DLM cache hit vs miss latency; SLM offload round-trip."""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.cluster import SimCluster
+from repro.core.tiering import DLMCache, SLMTier
+
+
+def run():
+    rows = []
+    root = Path(tempfile.mkdtemp())
+    c = SimCluster(root, n_nodes=1)
+    store = c.stores["node0"]
+    obj = {"x": np.random.RandomState(0).randn(1 << 20).astype(np.float32)}
+
+    cache = DLMCache(store, capacity_bytes=1 << 26)
+    cache.put("hot", obj)
+    t0 = time.perf_counter()
+    for _ in range(20):
+        cache.get("hot")
+    hit = (time.perf_counter() - t0) / 20
+    cache2 = DLMCache(store, capacity_bytes=1 << 26)
+    store.put("dlm/cold", obj)
+    t0 = time.perf_counter()
+    cache2.get("cold")
+    miss = time.perf_counter() - t0
+    rows.append(("dlm_hit", hit * 1e6, f"miss/hit={miss / max(hit, 1e-9):.0f}x"))
+    rows.append(("dlm_miss_pmem", miss * 1e6, "loads_from_pmem"))
+
+    slm = SLMTier(store, "opt")
+    tree = {"m": obj["x"], "v": obj["x"], "p": obj["x"][:16]}
+    t0 = time.perf_counter()
+    resident, handle = slm.offload(tree, ["m", "v"])
+    off = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    slm.fetch(resident, handle)
+    fetch = time.perf_counter() - t0
+    rows.append(("slm_offload_8MB", off * 1e6, f"fetch={fetch * 1e3:.1f}ms"))
+    c.shutdown()
+    return rows

@@ -1,0 +1,109 @@
+"""Roofline report generator: artifacts/dryrun/*.json -> markdown tables.
+
+Terms are the HLO-derived per-device times (launch/hlo_analysis.py):
+  compute_s    = flops / 197e12        (bf16 peak per chip)
+  memory_s     = bytes / 819e9         (HBM)
+  collective_s = wire_bytes / 50e9     (ICI per link)
+roofline_fraction = (model_flops / peak) / max(term): the score reported
+in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+LEVERS = {
+    "compute": "cut remat recompute / skip masked attention blocks",
+    "memory": "fuse attention (Pallas flash path), fewer f32 intermediates",
+    "collective": "sequence-parallel TP (reduce-scatter instead of "
+                  "all-reduce), overlap grad reduction",
+}
+
+
+def load(outdir: str = "artifacts/dryrun", tag: str = "") -> List[dict]:
+    """Canonical (untagged) cells end with the mesh token; hillclimb
+    variants carry a _<tag> suffix."""
+    rows = []
+    for f in sorted(Path(outdir).glob("*.json")):
+        d = json.loads(f.read_text())
+        d["_file"] = f.stem
+        untagged = f.stem.endswith("16x16")
+        if (tag and f.stem.endswith(f"_{tag}")) or (not tag and untagged):
+            rows.append(d)
+    return rows
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s * 1e6:.0f}us"
+
+
+def dryrun_table(rows: List[dict]) -> str:
+    out = ["| cell | mesh | kind | fits 16GB | args GB | peak-model GB | "
+           "flops/dev | AG | AR | RS | A2A | CP | compile |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d.get("skipped"):
+            out.append(f"| {d['arch']}:{d['shape']} | {d['mesh']} | — | "
+                       f"skip | — | — | — | — | — | — | — | — | — |")
+            continue
+        c = d["collectives"]
+        m = d["memory"]
+
+        def cnt(k):
+            return int(c.get(k, {}).get("count", 0))
+        out.append(
+            f"| {d['arch']}:{d['shape']} | {d['mesh']} | {d['kind']} | "
+            f"{'yes' if m['fits_16GB'] else 'NO'} | "
+            f"{m['arg_bytes_exact'] / 1e9:.2f} | "
+            f"{m['peak_model'] / 1e9:.2f} | {d['flops_per_device']:.2e} | "
+            f"{cnt('all-gather')} | {cnt('all-reduce')} | "
+            f"{cnt('reduce-scatter')} | {cnt('all-to-all')} | "
+            f"{cnt('collective-permute')} | "
+            f"{d['timing']['compile_s']:.0f}s |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: List[dict]) -> str:
+    out = ["| cell | mesh | compute | memory | collective | dominant | "
+           "useful-FLOPs ratio | roofline frac | lever |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d.get("skipped"):
+            continue
+        r = d["roofline"]
+        out.append(
+            f"| {d['arch']}:{d['shape']} | {d['mesh']} | "
+            f"{fmt_seconds(r['compute_s'])} | {fmt_seconds(r['memory_s'])} | "
+            f"{fmt_seconds(r['collective_s'])} | **{r['dominant']}** | "
+            f"{r['useful_compute_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.4f} | {LEVERS[r['dominant']]} |")
+    return "\n".join(out)
+
+
+def pick_hillclimb_cells(rows: List[dict]) -> Dict[str, str]:
+    live = [d for d in rows if not d.get("skipped")
+            and d["mesh"] == "16x16"]
+    worst = min(live, key=lambda d: d["roofline"]["roofline_fraction"])
+    coll = max(live, key=lambda d: d["roofline"]["collective_s"] /
+               max(d["roofline"]["compute_s"], 1e-9))
+    return {"worst_fraction": f"{worst['arch']}:{worst['shape']}",
+            "most_collective_bound": f"{coll['arch']}:{coll['shape']}"}
+
+
+def main():
+    rows = load()
+    print("## Dry-run table\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline table\n")
+    print(roofline_table(rows))
+    print("\n## Hillclimb candidates\n")
+    print(json.dumps(pick_hillclimb_cells(rows), indent=1))
+
+
+if __name__ == "__main__":
+    main()

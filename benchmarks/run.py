@@ -1,0 +1,48 @@
+"""Benchmark harness: one bench per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--roofline`` additionally
+regenerates the dry-run/roofline markdown tables from artifacts/dryrun.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_checkpoint, bench_io_scaling,
+                            bench_kernels, bench_staging, bench_tiering)
+    suites = {
+        "io_scaling": bench_io_scaling.run,       # paper Table I
+        "checkpoint": bench_checkpoint.run,       # async/delta claims (§V.8)
+        "staging": bench_staging.run,             # burst buffer (Fig. 8)
+        "tiering": bench_tiering.run,             # SLM/DLM modes (§II-B)
+        "kernels": bench_kernels.run,
+    }
+    print("name,us_per_call,derived")
+    failed = False
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+        except Exception as e:
+            failed = True
+            print(f"{name},ERROR,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if args.roofline:
+        from benchmarks import roofline
+        roofline.main()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Elastic restart demo: train on 4 nodes, lose a node, resume from buddy
+replicas on the survivors, then grow again — all from node-local pmem.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import elastic  # noqa: E402
+from repro.launch import train as train_cli  # noqa: E402
+
+
+def main():
+    print("== phase A: node failure mid-training, buddy recovery ==")
+    train_cli.main(["--arch", "starcoder2-15b", "--smoke", "--steps", "12",
+                    "--seq", "48", "--batch", "4", "--ckpt-every", "3",
+                    "--fault-at", "8"])
+    print("\n== phase B: shrink the cluster between runs (4 -> 2 nodes) ==")
+    elastic.main(["--arch", "gemma2-9b", "--steps", "5",
+                  "--nodes-before", "4", "--nodes-after", "2"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Quickstart: train a reduced-config model end-to-end on CPU with the
+full pmem systemware stack (staged data, async node-local checkpoints).
+
+    PYTHONPATH=src python examples/quickstart.py [--arch gemma2-9b]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train as train_cli  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+    train_cli.main(["--arch", args.arch, "--smoke",
+                    "--steps", str(args.steps), "--seq", "64",
+                    "--batch", "8", "--ckpt-every", "10"])
+
+
+if __name__ == "__main__":
+    main()

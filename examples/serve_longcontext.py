@@ -1,0 +1,55 @@
+"""Serving with persistent-memory session state: prefill, decode, spill
+the KV cache to B-APM, 'restart', resume the session bit-exactly.
+
+    PYTHONPATH=src python examples/serve_longcontext.py
+"""
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import registry  # noqa: E402
+from repro.core.cluster import SimCluster  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.serve.engine import ServeEngine  # noqa: E402
+
+
+def main():
+    cfg = registry.get_smoke_config("recurrentgemma-9b")  # sub-quadratic
+    rt = T.ModelRuntime(tp=1, attn_impl="naive", max_seq=128, remat=False)
+    params, _ = T.init_params(jax.random.PRNGKey(0), cfg, rt)
+    cluster = SimCluster(Path(tempfile.mkdtemp()), n_nodes=1)
+    store = cluster.stores["node0"]
+
+    eng = ServeEngine(cfg, rt, params, store=store)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (2, 32)).astype(np.int32)
+    first = eng.prefill(prompts)
+    out = eng.decode(first, 8)
+    print("generated:", out[:, 1:].tolist())
+
+    eng.spill("session-A")
+    print(f"KV/session state spilled to pmem "
+          f"({store.pool.used_bytes()} bytes persisted)")
+
+    # 'process restart': a brand-new engine resumes from B-APM
+    eng2 = ServeEngine(cfg, rt, params, store=store)
+    eng2.resume("session-A")
+    more = eng2.decode(out[:, -1], 8)
+    print("resumed generation:", more[:, 1:].tolist())
+
+    # check: an uninterrupted engine produces the identical continuation
+    ref = ServeEngine(cfg, rt, params)
+    f = ref.prefill(prompts)
+    full = ref.decode(f, 16)
+    assert (full[:, 9:] == more[:, 1:]).all(), "resume diverged!"
+    print("bit-exact resume across 'restart' — OK")
+    cluster.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+# The paper's primary contribution — the B-APM systemware stack:
+# pmem pools (PMDK-style), versioned object store, async data scheduler,
+# distributed node-local checkpointing, SLM/DLM tiering, workflow-aware
+# scheduling, and failure/straggler resilience. See DESIGN.md §2-§3.
+from repro.core.checkpoint import DistributedCheckpointer
+from repro.core.cluster import SimCluster
+from repro.core.data_scheduler import DataScheduler, ExternalStore
+from repro.core.object_store import DistributedStore, PMemObjectStore
+from repro.core.pmem import PMemPool, PMemRegion
+from repro.core.resilience import (FailureRecovery, Heartbeat,
+                                   StragglerDetector)
+from repro.core.tiering import DLMCache, SLMTier, TieredKVCache
+from repro.core.workflow import JobSpec, WorkflowScheduler

@@ -1,0 +1,53 @@
+"""Simulated multi-node cluster wiring (one directory per node's B-APM).
+
+Binds together pools, object stores, the data scheduler, the external
+store, checkpointing and resilience — the "systemware" stack of paper
+Fig. 7 — for tests, examples, and benchmarks. On real hardware the same
+objects are constructed per-host with the local pmem mount.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.core.checkpoint import DistributedCheckpointer
+from repro.core.data_scheduler import DataScheduler, ExternalStore
+from repro.core.object_store import DistributedStore, PMemObjectStore
+from repro.core.pmem import PMemPool
+from repro.core.resilience import FailureRecovery, Heartbeat
+from repro.core.workflow import WorkflowScheduler
+
+
+class SimCluster:
+    def __init__(self, root: Path, n_nodes: int = 4,
+                 pmem_capacity: int = 1 << 32,
+                 external_bandwidth: Optional[float] = None,
+                 buddy: bool = True, delta: bool = False):
+        self.root = Path(root)
+        self.node_ids = [f"node{i}" for i in range(n_nodes)]
+        self.pools: Dict[str, PMemPool] = {
+            nid: PMemPool(self.root / "pmem", nid,
+                          capacity_bytes=pmem_capacity)
+            for nid in self.node_ids}
+        self.stores: Dict[str, PMemObjectStore] = {
+            nid: PMemObjectStore(pool) for nid, pool in self.pools.items()}
+        self.external = ExternalStore(self.root / "external",
+                                      bandwidth_bytes_s=external_bandwidth)
+        self.scheduler = DataScheduler(self.stores, self.external)
+        self.view = DistributedStore(self.stores)
+        self.checkpointer = DistributedCheckpointer(
+            self.stores, self.scheduler, self.external, buddy=buddy,
+            delta=delta)
+        self.heartbeat = Heartbeat(self.stores)
+        self.recovery = FailureRecovery(self.checkpointer, self.heartbeat)
+        self.workflows = WorkflowScheduler(self.stores, self.scheduler,
+                                           self.external)
+
+    def kill_node(self, nid: str) -> None:
+        """Simulate a node failure: its pmem becomes unreachable."""
+        import shutil
+        shutil.rmtree(self.pools[nid].root)
+        # monitor sees it dead because heartbeats stop / are gone
+
+    def shutdown(self) -> None:
+        self.scheduler.shutdown()

@@ -1,0 +1,170 @@
+"""Per-node asynchronous data scheduler (the paper's §V-B).
+
+A daemon per node moves data without blocking the application:
+  stage_in   - external store -> node pmem (burst-buffer pre-load, Fig. 8)
+  drain      - node pmem -> external store (async checkpoint flush)
+  replicate  - node pmem -> buddy-node pmem (the paper's remote B-APM
+               access over the fabric; used for failure tolerance)
+
+Work items run on per-node worker threads with priority queues; idle nodes
+can *steal* stage-in work from overloaded ones (straggler mitigation,
+core/resilience.py). Byte counters per channel feed the benchmarks.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.object_store import PMemObjectStore
+
+
+class ExternalStore:
+    """The 'external high performance filesystem' of Fig. 4 (emulated as a
+    directory with configurable artificial bandwidth for benchmarks)."""
+
+    def __init__(self, root: Path, bandwidth_bytes_s: Optional[float] = None):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.bandwidth = bandwidth_bytes_s
+
+    def _throttle(self, nbytes: int) -> None:
+        if self.bandwidth:
+            time.sleep(nbytes / self.bandwidth)
+
+    def put(self, name: str, tree) -> None:
+        import pickle
+        p = self.root / (name.replace("/", "_") + ".pkl")
+        data = pickle.dumps(tree)
+        self._throttle(len(data))
+        tmp = p.with_suffix(".tmp")
+        tmp.write_bytes(data)
+        tmp.replace(p)
+
+    def get(self, name: str):
+        import pickle
+        p = self.root / (name.replace("/", "_") + ".pkl")
+        data = p.read_bytes()
+        self._throttle(len(data))
+        return pickle.loads(data)
+
+    def exists(self, name: str) -> bool:
+        return (self.root / (name.replace("/", "_") + ".pkl")).exists()
+
+
+@dataclass(order=True)
+class _Task:
+    priority: int
+    seq: int
+    fn: Callable = field(compare=False)
+    future: Future = field(compare=False)
+
+
+class DataScheduler:
+    """Async movement daemons over {node_id -> PMemObjectStore}."""
+
+    def __init__(self, stores: Dict[str, PMemObjectStore],
+                 external: ExternalStore, workers_per_node: int = 1):
+        self.stores = stores
+        self.external = external
+        self.queues: Dict[str, "queue.PriorityQueue[_Task]"] = {
+            nid: queue.PriorityQueue() for nid in stores}
+        self.stats = {nid: {"staged_in": 0, "drained": 0, "replicated": 0}
+                      for nid in stores}
+        self._seq = 0
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._lock = threading.Lock()
+        for nid in stores:
+            for w in range(workers_per_node):
+                t = threading.Thread(target=self._worker, args=(nid,),
+                                     daemon=True, name=f"dsched-{nid}-{w}")
+                t.start()
+                self._threads.append(t)
+
+    # ---- worker loop with work stealing ----
+    def _worker(self, nid: str) -> None:
+        while not self._stop.is_set():
+            task = self._next_task(nid)
+            if task is None:
+                time.sleep(0.002)
+                continue
+            try:
+                task.future.set_result(task.fn())
+            except Exception as e:  # surfaced via the future
+                task.future.set_exception(e)
+
+    def _next_task(self, nid: str) -> Optional[_Task]:
+        try:
+            return self.queues[nid].get_nowait()
+        except queue.Empty:
+            pass
+        # steal from the deepest queue (straggler mitigation)
+        victim = max(self.queues, key=lambda n: self.queues[n].qsize())
+        if victim != nid and self.queues[victim].qsize() > 1:
+            try:
+                return self.queues[victim].get_nowait()
+            except queue.Empty:
+                return None
+        return None
+
+    def _submit(self, nid: str, fn: Callable, priority: int) -> Future:
+        fut: Future = Future()
+        with self._lock:
+            self._seq += 1
+            seq = self._seq
+        self.queues[nid].put(_Task(priority, seq, fn, fut))
+        return fut
+
+    # ---- public channels ----
+    def stage_in(self, nid: str, external_name: str, obj_name: str,
+                 version: int = 0, priority: int = 0) -> Future:
+        def go():
+            tree = self.external.get(external_name)
+            man = self.stores[nid].put(obj_name, tree, version)
+            self.stats[nid]["staged_in"] += man["nbytes"]
+            return man
+        return self._submit(nid, go, priority)
+
+    def drain(self, nid: str, obj_name: str, external_name: str,
+              version: int = 0, priority: int = 1,
+              delete_after: bool = False) -> Future:
+        def go():
+            tree = self.stores[nid].get(obj_name, version)
+            self.external.put(external_name, tree)
+            man = self.stores[nid].manifest(obj_name, version)
+            self.stats[nid]["drained"] += man["nbytes"]
+            if delete_after:
+                self.stores[nid].delete(obj_name, version)
+            return external_name
+        return self._submit(nid, go, priority)
+
+    def replicate(self, src: str, obj_name: str, dst: str,
+                  version: int = 0, priority: int = 2,
+                  dst_name: Optional[str] = None) -> Future:
+        """Copy an object to another node's pmem under ``dst_name``
+        (defaults to replica/<src>/<obj> so it never shadows the
+        destination's own objects)."""
+        name = dst_name or f"replica/{src}/{obj_name}"
+
+        def go():
+            tree = self.stores[src].get(obj_name, version)
+            man = self.stores[dst].put(name, tree, version,
+                                       meta={"replica_of": src})
+            self.stats[src]["replicated"] += man["nbytes"]
+            return man
+        return self._submit(src, go, priority)
+
+    def queue_depth(self, nid: str) -> int:
+        return self.queues[nid].qsize()
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=2.0)

@@ -1,0 +1,134 @@
+"""Byte-addressable persistent memory emulation (PMDK-style pools).
+
+The paper's B-APM hardware is exposed to applications exactly the way PMDK
+does it: named pools are mmap'd into the address space and accessed by
+byte-granular loads/stores, with explicit flush (CLWB) + fence (SFENCE) for
+persistence ordering. On this CPU container a pool region is an
+``np.memmap`` over a file in the node's pmem directory — the same mmap
+mechanism PMDK uses — and ``flush()`` is ``mmap.flush`` (msync). On a real
+TPU host the identical API fronts /dev/dax or an NVMe-backed mount.
+
+One ``PMemPool`` == one node's B-APM. Multi-node topologies are emulated by
+one pool directory per node (core/cluster.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+class PMemRegion:
+    """A named byte range inside a pool, accessed via numpy memmap."""
+
+    def __init__(self, path: Path, nbytes: int, create: bool):
+        self.path = path
+        self.nbytes = nbytes
+        mode = "w+" if create else "r+"
+        self._mm = np.memmap(path, dtype=np.uint8, mode=mode, shape=(nbytes,))
+        self._flushed = not create
+
+    # ---- byte-addressable access ----
+    def write(self, offset: int, data: np.ndarray) -> None:
+        buf = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+        self._mm[offset:offset + buf.nbytes] = buf
+        self._flushed = False
+
+    def read(self, offset: int, nbytes: int, dtype=np.uint8,
+             shape=None) -> np.ndarray:
+        raw = self._mm[offset:offset + nbytes]
+        out = raw.view(dtype)
+        return out.reshape(shape) if shape is not None else out
+
+    def flush(self) -> None:
+        """CLWB+SFENCE analogue: force bytes to the persistent medium."""
+        self._mm.flush()
+        self._flushed = True
+
+    def close(self) -> None:
+        self.flush()
+        del self._mm
+
+
+class PMemPool:
+    """A node's B-APM: a directory of named regions + usage accounting."""
+
+    def __init__(self, root: Path, node_id: str = "node0",
+                 capacity_bytes: int = 1 << 34):
+        self.root = Path(root) / node_id
+        self.node_id = node_id
+        self.capacity_bytes = capacity_bytes
+        self.root.mkdir(parents=True, exist_ok=True)
+        self._open: Dict[str, PMemRegion] = {}
+        self._lock = threading.RLock()
+
+    def _path(self, name: str) -> Path:
+        p = (self.root / name).resolve()
+        assert str(p).startswith(str(self.root.resolve())), name
+        return p
+
+    def create(self, name: str, nbytes: int) -> PMemRegion:
+        with self._lock:
+            if self.used_bytes() + nbytes > self.capacity_bytes:
+                raise MemoryError(
+                    f"pmem pool {self.node_id} over capacity: "
+                    f"{self.used_bytes() + nbytes} > {self.capacity_bytes}")
+            path = self._path(name)
+            path.parent.mkdir(parents=True, exist_ok=True)
+            region = PMemRegion(path, nbytes, create=True)
+            self._open[name] = region
+            return region
+
+    def open(self, name: str) -> PMemRegion:
+        with self._lock:
+            if name in self._open:
+                return self._open[name]
+            path = self._path(name)
+            region = PMemRegion(path, path.stat().st_size, create=False)
+            self._open[name] = region
+            return region
+
+    def exists(self, name: str) -> bool:
+        return self._path(name).exists()
+
+    def delete(self, name: str) -> None:
+        with self._lock:
+            r = self._open.pop(name, None)
+            if r is not None:
+                r.close()
+            p = self._path(name)
+            if p.exists():
+                p.unlink()
+
+    def list(self, prefix: str = "") -> Iterator[str]:
+        base = self.root
+        for p in sorted(base.rglob("*")):
+            if p.is_file():
+                rel = str(p.relative_to(base))
+                if rel.startswith(prefix):
+                    yield rel
+
+    def used_bytes(self) -> int:
+        return sum(p.stat().st_size for p in self.root.rglob("*")
+                   if p.is_file())
+
+    # ---- small atomic metadata (manifests) ----
+    def put_json(self, name: str, obj) -> None:
+        """Crash-consistent metadata commit: tmp write + fsync + rename."""
+        path = self._path(name)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(path.suffix + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(obj, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic on POSIX
+
+    def get_json(self, name: str):
+        with open(self._path(name)) as f:
+            return json.load(f)

@@ -1,0 +1,90 @@
+"""Failure detection, straggler mitigation, recovery orchestration.
+
+Heartbeats are small records in each node's pmem pool (surviving the
+node's own crash for post-mortem, and readable by the monitor over the
+fabric — the paper's remote B-APM access). Stragglers are detected from
+per-step duration statistics; mitigation = stage-in work-stealing (the
+data scheduler already steals from the deepest queue) plus a rebalance
+hook the training loop can use.
+
+``FailureRecovery`` glues it together: dead node -> restore from buddy
+replicas -> elastic restart on the survivors (checkpoint.restore handles
+re-sharding).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.checkpoint import DistributedCheckpointer
+from repro.core.object_store import PMemObjectStore
+
+
+class Heartbeat:
+    def __init__(self, stores: Dict[str, PMemObjectStore]):
+        self.stores = stores
+
+    def beat(self, nid: str, step: int) -> None:
+        self.stores[nid].pool.put_json(
+            "hb/heartbeat.json", {"ts": time.time(), "step": step})
+
+    def read(self, nid: str) -> Optional[dict]:
+        try:
+            return self.stores[nid].pool.get_json("hb/heartbeat.json")
+        except FileNotFoundError:
+            return None
+
+    def dead_nodes(self, timeout_s: float, now: Optional[float] = None
+                   ) -> List[str]:
+        now = now or time.time()
+        dead = []
+        for nid in self.stores:
+            hb = self.read(nid)
+            if hb is None or now - hb["ts"] > timeout_s:
+                dead.append(nid)
+        return dead
+
+
+class StragglerDetector:
+    """Flags nodes whose step times exceed k x median of the fleet."""
+
+    def __init__(self, threshold: float = 1.5, window: int = 16):
+        self.threshold = threshold
+        self.window = window
+        self._times: Dict[str, List[float]] = {}
+
+    def record(self, nid: str, step_seconds: float) -> None:
+        hist = self._times.setdefault(nid, [])
+        hist.append(step_seconds)
+        del hist[:-self.window]
+
+    def stragglers(self) -> List[str]:
+        if len(self._times) < 2:
+            return []
+        medians = {n: statistics.median(v) for n, v in self._times.items()
+                   if v}
+        fleet = statistics.median(medians.values())
+        return [n for n, m in medians.items()
+                if m > self.threshold * fleet]
+
+
+class FailureRecovery:
+    def __init__(self, ckpt: DistributedCheckpointer, hb: Heartbeat,
+                 timeout_s: float = 10.0):
+        self.ckpt = ckpt
+        self.hb = hb
+        self.timeout_s = timeout_s
+
+    def check_and_recover(self, now: Optional[float] = None):
+        """Returns None if healthy, else (restored_tree, manifest,
+        dead_nodes) — restored from the latest checkpoint with dead nodes'
+        shards served by their buddies."""
+        dead = self.hb.dead_nodes(self.timeout_s, now)
+        if not dead:
+            return None
+        step = self.ckpt.latest_step()
+        if step is None:
+            raise RuntimeError(f"nodes {dead} dead and no checkpoint exists")
+        tree, manifest = self.ckpt.restore(step, lost_nodes=dead)
+        return tree, manifest, dead

@@ -1,0 +1,130 @@
+"""SLM / DLM memory-mode policies (paper §II-B).
+
+SLM (single-level): DRAM and B-APM are two explicit spaces. ``SLMTier``
+places chosen pytree leaves in pmem and stages them in/out explicitly at
+step boundaries — used for optimizer-state offload and cold KV pages.
+
+DLM (dual-level): DRAM acts as a transparent cache over pmem. ``DLMCache``
+is an LRU write-back cache keyed by object name — readers always use
+``get``; eviction spills to pmem; nothing else changes for the caller.
+The mode is selected per job by the workflow scheduler (paper §V-A item 9).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.object_store import PMemObjectStore, _flatten, _unflatten
+
+
+class SLMTier:
+    """Explicit two-space placement: leaves listed in ``pmem_leaves`` live
+    in the pool; the rest stay in DRAM (the returned pytree)."""
+
+    def __init__(self, store: PMemObjectStore, name: str):
+        self.store = store
+        self.name = name
+        self._placed: Dict[str, int] = {}  # leaf path -> version counter
+
+    def offload(self, tree, leaf_paths: Iterable[str]):
+        """Move selected leaves to pmem; returns (resident_tree, handle).
+        Offloaded leaves are replaced by None placeholders."""
+        paths = set(leaf_paths)
+        leaves = dict(_flatten(tree))
+        off = {p: leaves[p] for p in paths if p in leaves}
+        version = int(time.time() * 1e6) % (1 << 31)
+        self.store.put(f"slm/{self.name}", off, version=0,
+                       meta={"v": version})
+        resident = {p: v for p, v in leaves.items() if p not in paths}
+        self._placed = {p: version for p in off}
+        return _unflatten(resident), sorted(off)
+
+    def fetch(self, resident_tree, handle: List[str]):
+        """Stage offloaded leaves back in and merge with the resident part."""
+        off = dict(_flatten(self.store.get(f"slm/{self.name}")))
+        leaves = dict(_flatten(resident_tree))
+        leaves.update(off)
+        return _unflatten(leaves)
+
+
+class DLMCache:
+    """LRU DRAM cache over a pmem object store (write-back)."""
+
+    def __init__(self, store: PMemObjectStore, capacity_bytes: int):
+        self.store = store
+        self.capacity = capacity_bytes
+        self._cache: "collections.OrderedDict[str, Any]" = \
+            collections.OrderedDict()
+        self._sizes: Dict[str, int] = {}
+        self._dirty: Dict[str, bool] = {}
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def _bytes(self, tree) -> int:
+        return sum(np.asarray(a).nbytes for _, a in _flatten(tree))
+
+    def _evict_until_fits(self, incoming: int) -> None:
+        while self._cache and \
+                sum(self._sizes.values()) + incoming > self.capacity:
+            name, tree = self._cache.popitem(last=False)
+            if self._dirty.pop(name, False):
+                self.store.put(f"dlm/{name}", tree)  # write-back
+            self._sizes.pop(name)
+            self.evictions += 1
+
+    def put(self, name: str, tree) -> None:
+        with self._lock:
+            nb = self._bytes(tree)
+            self._evict_until_fits(nb)
+            self._cache[name] = tree
+            self._cache.move_to_end(name)
+            self._sizes[name] = nb
+            self._dirty[name] = True
+
+    def get(self, name: str):
+        with self._lock:
+            if name in self._cache:
+                self.hits += 1
+                self._cache.move_to_end(name)
+                return self._cache[name]
+            self.misses += 1
+            tree = self.store.get(f"dlm/{name}")
+            nb = self._bytes(tree)
+            self._evict_until_fits(nb)
+            self._cache[name] = tree
+            self._sizes[name] = nb
+            self._dirty[name] = False
+            return tree
+
+    def flush(self) -> None:
+        with self._lock:
+            for name, tree in self._cache.items():
+                if self._dirty.get(name):
+                    self.store.put(f"dlm/{name}", tree)
+                    self._dirty[name] = False
+
+
+class TieredKVCache:
+    """Paged KV spill tier for serving: hot pages in DRAM (DLM-cached),
+    cold pages in pmem — the long-context serving use of the paper's
+    memory hierarchy (serve/engine.py)."""
+
+    def __init__(self, store: PMemObjectStore, dram_capacity_bytes: int):
+        self.cache = DLMCache(store, dram_capacity_bytes)
+
+    def put_page(self, seq_id: int, layer: int, page: int, kv) -> None:
+        self.cache.put(f"kv/{seq_id}/{layer}/{page}", kv)
+
+    def get_page(self, seq_id: int, layer: int, page: int):
+        return self.cache.get(f"kv/{seq_id}/{layer}/{page}")
+
+    @property
+    def stats(self):
+        return {"hits": self.cache.hits, "misses": self.cache.misses,
+                "evictions": self.cache.evictions}

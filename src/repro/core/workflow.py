@@ -1,0 +1,120 @@
+"""Workflow-aware job scheduling with pmem data retention (paper §V-A, §VI).
+
+A workflow is a DAG of jobs. The scheduler implements the paper's Fig. 8
+sequence: allocate nodes -> set memory mode -> stage inputs into node pmem
+(burst buffer) -> launch -> leave retained outputs in pmem for dependent
+jobs (in-situ sharing, no external round-trip) -> drain final outputs ->
+clean up pmem (data security: nothing survives unless retained).
+
+Placement is data-affine: a job preferentially lands on nodes already
+holding the largest share of its inputs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.data_scheduler import DataScheduler, ExternalStore
+from repro.core.object_store import DistributedStore, PMemObjectStore
+
+
+@dataclass
+class JobSpec:
+    name: str
+    fn: Callable[["JobContext"], Dict[str, Any]]
+    inputs: Tuple[str, ...] = ()        # object names (from deps or external)
+    after: Tuple[str, ...] = ()         # job-name dependencies
+    retain: Tuple[str, ...] = ()        # outputs kept in pmem for deps
+    drain: Tuple[str, ...] = ()         # outputs drained to external at end
+    n_nodes: int = 1
+    memory_mode: str = "slm"            # slm | dlm (paper §V-A item 9)
+
+
+@dataclass
+class JobContext:
+    job: JobSpec
+    nodes: List[str]
+    stores: Dict[str, PMemObjectStore]
+    view: DistributedStore
+
+    def read(self, name: str):
+        return self.view.get(name, prefer=self.nodes[0])
+
+
+class WorkflowScheduler:
+    def __init__(self, stores: Dict[str, PMemObjectStore],
+                 scheduler: DataScheduler, external: ExternalStore):
+        self.stores = stores
+        self.nodes = sorted(stores)
+        self.dsched = scheduler
+        self.external = external
+        self.view = DistributedStore(stores)
+        self.events: List[Tuple[float, str, str]] = []  # (ts, kind, detail)
+        self._retained: Dict[str, str] = {}  # object -> producing job
+
+    def _log(self, kind: str, detail: str) -> None:
+        self.events.append((time.time(), kind, detail))
+
+    # ---- placement: data affinity ----
+    def _place(self, job: JobSpec) -> List[str]:
+        score = {n: 0 for n in self.nodes}
+        for obj in job.inputs:
+            for n in self.view.locate(obj):
+                score[n] += 1
+        ranked = sorted(self.nodes, key=lambda n: -score[n])
+        return ranked[:job.n_nodes]
+
+    # ---- Fig. 8 lifecycle ----
+    def run(self, jobs: Sequence[JobSpec]) -> Dict[str, Dict[str, Any]]:
+        by_name = {j.name: j for j in jobs}
+        done: Dict[str, Dict[str, Any]] = {}
+        pending = list(jobs)
+        while pending:
+            ready = [j for j in pending if all(a in done for a in j.after)]
+            if not ready:
+                raise RuntimeError("workflow deadlock (cyclic deps?)")
+            job = ready[0]
+            pending.remove(job)
+            nodes = self._place(job)                       # (2) allocate
+            self._log("allocate", f"{job.name} -> {nodes} "
+                      f"mode={job.memory_mode}")
+            # (3) stage-in: burst-buffer any inputs not already in pmem
+            futs = []
+            for obj in job.inputs:
+                if not self.view.locate(obj):
+                    if not self.external.exists(obj):
+                        raise KeyError(f"input {obj} nowhere to be found")
+                    futs.append(self.dsched.stage_in(nodes[0], obj, obj))
+                    self._log("stage_in", f"{obj} -> {nodes[0]}")
+                else:
+                    self._log("in_situ", f"{obj} already in pmem "
+                              f"(retained by {self._retained.get(obj)})")
+            for f in futs:
+                f.result()
+            # (4-7) run the job
+            ctx = JobContext(job, nodes, self.stores, self.view)
+            self._log("launch", job.name)
+            outputs = job.fn(ctx) or {}
+            done[job.name] = outputs
+            # retained outputs stay in pmem (spread across the job's nodes)
+            for i, (name, tree) in enumerate(sorted(outputs.items())):
+                node = nodes[i % len(nodes)]
+                self.stores[node].put(name, tree)
+                if name in job.retain:
+                    self._retained[name] = job.name
+                    self._log("retain", f"{name} on {node}")
+            # (8) drain requested outputs to the external store (async)
+            for name in job.drain:
+                src = self.view.locate(name)[0]
+                self.dsched.drain(src, name, name)
+                self._log("drain", f"{name} {src} -> external")
+        return done
+
+    def cleanup(self, keep: Sequence[str] = ()) -> None:
+        """Post-workflow pmem scrub (paper §V items 6/10)."""
+        for nid, st in self.stores.items():
+            for name, v in st.list_objects():
+                if name not in keep:
+                    st.delete(name, v)
+                    self._log("cleanup", f"{name} on {nid}")

@@ -1,0 +1,29 @@
+"""Mesh axis conventions.
+
+Production meshes (launch/mesh.py): single-pod (16,16)=("data","model"),
+multi-pod (2,16,16)=("pod","data","model"). "pod" defaults to an extra
+data-parallel axis; distributed/pipeline.py can repurpose it as a pipeline
+axis. Everything here is mesh-shape agnostic (smoke tests use tiny meshes).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes that shard the batch dimension (every non-'model' axis)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,37 @@
+"""Jit'd wrappers: flatten/pad arbitrary arrays through the tile codec."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ckpt_codec.kernel import TILE, decode_tiles, encode_tiles
+
+
+def _to_tiles(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % TILE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, TILE), n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_encode(new: jax.Array, base: jax.Array, *,
+                 interpret: bool = False):
+    """Any-shape arrays -> (q int8 [n_tiles, TILE], scales [n_tiles, 1])."""
+    nt, _ = _to_tiles(new)
+    bt, _ = _to_tiles(base)
+    return encode_tiles(nt, bt, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "interpret"))
+def delta_decode(q: jax.Array, scales: jax.Array, base: jax.Array, *,
+                 shape: Tuple[int, ...], dtype=jnp.bfloat16,
+                 interpret: bool = False) -> jax.Array:
+    bt, n = _to_tiles(base)
+    out = decode_tiles(q, scales, bt, dtype=dtype, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)

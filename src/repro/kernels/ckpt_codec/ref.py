@@ -1,0 +1,21 @@
+"""Pure-jnp / numpy oracle for the delta-int8 codec (also the host-side
+implementation used by the live checkpoint path on CPU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+TILE = 1024
+
+
+def encode_ref(new, base):
+    d = np.asarray(new, np.float32) - np.asarray(base, np.float32)
+    absmax = np.max(np.abs(d), axis=-1, keepdims=True)
+    scale = np.maximum(absmax / 127.0, 1e-12)
+    q = np.clip(np.round(d / scale), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float32)
+
+
+def decode_ref(q, scale, base, dtype=np.float32):
+    d = q.astype(np.float32) * scale
+    return (np.asarray(base, np.float32) + d).astype(dtype)

@@ -1,0 +1,26 @@
+"""Jit'd wrapper: model layout [B,S,Kh,G,Dh] <-> kernel layout [B,H,S,D]."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
+                                             "interpret", "bq", "bk"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, window: int = 0, cap: float = 0.0,
+                    interpret: bool = False, bq: int = 512,
+                    bk: int = 512) -> jax.Array:
+    """q [B,S,H,Dh] (flat group-major heads); k,v [B,Sk,Kh,Dh]
+    -> [B,S,H,Dh]."""
+    b, s, h, dh = q.shape
+    qh = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_bhsd(qh, kt, vt, causal=causal, window=window,
+                             cap=cap, bq=bq, bk=bk, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel (naive full softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                  window: int = 0, cap: float = 0.0) -> jax.Array:
+    """q: [B,H,Sq,D]; k,v: [B,Kh,Sk,D]. Returns [B,H,Sq,D] (q.dtype)."""
+    b, h, sq, d = q.shape
+    kh = k.shape[1]
+    group = h // kh
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * (d ** -0.5)
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)) \
+        .astype(q.dtype)

@@ -1,0 +1,52 @@
+"""Grouped (ragged) expert matmul — megablox-style Pallas kernel.
+
+Tokens arrive sorted by expert with every expert group padded to a multiple
+of the token block ``bt`` (ops.py builds this layout), so each [bt, D] token
+tile multiplies exactly one expert's weights. The expert id per token block
+is a scalar-prefetch operand: the weight BlockSpec index_map reads
+``block_expert[i]`` to stream the right [D, bf] expert tile into VMEM —
+no gather/scatter inside the kernel, pure MXU work.
+
+Tile sizes: bt x D and D x bf tiles are chosen 128-aligned by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(block_expert_ref, x_ref, w_ref, o_ref):
+    del block_expert_ref  # consumed by the index maps
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def gmm(x_sorted: jax.Array, w: jax.Array, block_expert: jax.Array, *,
+        bt: int = 128, bf: int = 512, interpret: bool = False) -> jax.Array:
+    """x_sorted [T, D] (expert-sorted, block-aligned groups); w [E, D, F];
+    block_expert [T // bt] int32. Returns [T, F]."""
+    t, d = x_sorted.shape
+    e, _, f = w.shape
+    bf = min(bf, f)
+    assert t % bt == 0 and f % bf == 0
+    grid = (t // bt, f // bf)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j, be: (i, 0)),
+            pl.BlockSpec((1, d, bf), lambda i, j, be: (be[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bf), lambda i, j, be: (i, j)),
+    )
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((t, f), x_sorted.dtype),
+        interpret=interpret,
+    )(block_expert, x_sorted, w)

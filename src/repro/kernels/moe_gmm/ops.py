@@ -1,0 +1,74 @@
+"""Sorted-token MoE expert FFN built on the gmm kernel.
+
+``sort_tokens_by_expert`` produces the block-aligned sorted layout
+(capacity-free: every token is kept; groups are padded to the token-block
+size with zero rows routed to their own expert slot).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gmm.kernel import gmm
+
+
+def sort_tokens_by_expert(x: jax.Array, expert_ids: jax.Array, n_experts: int,
+                          bt: int = 128
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [T, D]; expert_ids [T] -> (x_sorted [Ts, D], block_expert [Ts//bt],
+    inverse_perm [T]) where Ts pads each group to a bt multiple.
+
+    Layout: each expert e gets cap = next multiple of bt >= its max count;
+    we use a static worst-case cap = ceil(T / bt) * bt per expert would be
+    huge, so instead tokens are sorted by expert and blocks may straddle a
+    boundary only at padded rows: we pad with ghost rows (expert id = its
+    block's majority) whose outputs are dropped by inverse_perm.
+
+    Simplification used here (exactness preserved): sort by expert, then pad
+    the *total* count to a bt multiple; a block containing a group boundary
+    is split by assigning it to the *first* group and masking rows of other
+    groups to zero so their contribution is recomputed in the next block.
+    For exactness without masking complexity, ops uses per-expert static
+    capacity = ceil(T/ n_experts * 2 / bt)*bt slots (cap-and-pad), which is
+    also what the distributed ETP path produces.
+    """
+    t, d = x.shape
+    cap = -(-t // bt) * bt  # per-expert capacity, block aligned (worst case)
+    order = jnp.argsort(expert_ids, stable=True)
+    x_sorted_raw = x[order]
+    ids_sorted = expert_ids[order]
+    # position of each sorted token within its expert group
+    ranks = jnp.arange(t) - jnp.searchsorted(ids_sorted, ids_sorted,
+                                             side="left")
+    slots = ids_sorted * cap + ranks
+    buf = jnp.zeros((n_experts * cap, d), x.dtype).at[slots].set(x_sorted_raw)
+    block_expert = (jnp.arange(n_experts * cap // bt) * bt) // cap
+    return buf, block_expert.astype(jnp.int32), (order, slots)
+
+
+def unsort(y_buf: jax.Array, meta, t: int) -> jax.Array:
+    order, slots = meta
+    y_sorted = y_buf[slots]
+    return jnp.zeros((t, y_buf.shape[-1]), y_buf.dtype).at[order] \
+        .set(y_sorted)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_experts", "bt", "bf", "interpret"))
+def moe_ffn_sorted(x: jax.Array, expert_ids: jax.Array, wi: jax.Array,
+                   wg: jax.Array, wo: jax.Array, *, n_experts: int,
+                   bt: int = 128, bf: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    """Full expert FFN over sorted tokens. x [T,D]; w* [E,D,F]/[E,F,D]."""
+    t = x.shape[0]
+    buf, block_expert, meta = sort_tokens_by_expert(x, expert_ids, n_experts,
+                                                    bt)
+    h = gmm(buf, wi, block_expert, bt=bt, bf=bf, interpret=interpret)
+    g = gmm(buf, wg, block_expert, bt=bt, bf=bf, interpret=interpret)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    y = gmm(h, wo, block_expert, bt=bt, bf=min(bf, wo.shape[-1]),
+            interpret=interpret)
+    return unsort(y, meta, t)

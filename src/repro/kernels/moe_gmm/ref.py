@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the grouped matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_ref(x_sorted: jax.Array, w: jax.Array,
+            block_expert: jax.Array, bt: int) -> jax.Array:
+    """Gather each block's expert weights and matmul. [T,D]x[E,D,F]->[T,F]."""
+    t, d = x_sorted.shape
+    nblk = t // bt
+    xb = x_sorted.reshape(nblk, bt, d)
+    wb = w[block_expert]  # [nblk, D, F]
+    return jnp.einsum("ntd,ndf->ntf", xb, wb,
+                      preferred_element_type=jnp.float32) \
+        .astype(x_sorted.dtype).reshape(t, -1)

@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.kernel import rglru_blocked
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def rglru(log_a: jax.Array, gated: jax.Array, *, block: int = 256,
+          interpret: bool = False) -> jax.Array:
+    """log_a, gated [B,S,W] f32 -> h [B,S,W] f32."""
+    return rglru_blocked(log_a.astype(jnp.float32),
+                         gated.astype(jnp.float32), bs=block,
+                         interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(log_a: jax.Array, gated: jax.Array) -> jax.Array:
+    """Sequential h_t = a_t h_{t-1} + sqrt(1-a_t^2) gated_t.
+
+    log_a, gated: [B, S, W] f32 -> h [B, S, W] f32.
+    """
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12)) * gated
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    _, h = jax.lax.scan(step, jnp.zeros_like(a[:, 0]),
+                        (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return h.transpose(1, 0, 2)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the SSD kernel: sequential state-space recurrence.
+
+h_t = exp(dt_t a_h) h_{t-1} + dt_t B_t (x_t)^T ;  y_t = C_t^T h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array):
+    """x [B,H,S,P]; dt [B,H,S]; a [H]; b,c [B,G,S,N].
+
+    Returns (y [B,H,S,P] f32, final state [B,H,N,P] f32).
+    """
+    B, H, S, P = x.shape
+    G, N = b.shape[1], b.shape[3]
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=1)  # [B,H,S,N]
+    ch = jnp.repeat(c, rep, axis=1)
+
+    def step(h, xs):
+        xt, dtt, bt, ct = xs  # [B,H,P],[B,H],[B,H,N],[B,H,N]
+        decay = jnp.exp(dtt * a)  # [B,H]
+        upd = jnp.einsum("bhn,bhp->bhnp", bt, xt * dtt[..., None])
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhnp,bhn->bhp", h, ct)
+        return h, y
+
+    xs = (x.transpose(2, 0, 1, 3).astype(jnp.float32),
+          dt.transpose(2, 0, 1).astype(jnp.float32),
+          bh.transpose(2, 0, 1, 3).astype(jnp.float32),
+          ch.transpose(2, 0, 1, 3).astype(jnp.float32))
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    hf, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 2, 0, 3), hf

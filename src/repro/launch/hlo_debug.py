@@ -1,0 +1,62 @@
+"""Top HBM/FLOP contributors of a saved HLO dump (perf-iteration tool).
+
+Usage: PYTHONPATH=src python -m repro.launch.hlo_debug /tmp/cell.hlo
+"""
+from __future__ import annotations
+
+import re
+import sys
+from collections import Counter
+
+from repro.launch.hlo_analysis import (_TRIP_RE, _shape_bytes, _trip_count,
+                                       parse_hlo)
+
+
+def breakdown(path: str, top: int = 18):
+    text = open(path).read()
+    comps = parse_hlo(text)
+    entry = [n for n in comps if "main" in n][0]
+    by_instr = Counter()
+
+    def visit(name, mult):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            if ins.op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", ins.tail or "")
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.tail or "")
+                tm = _TRIP_RE.search(ins.raw)
+                trips = int(tm.group(1)) if tm else (
+                    _trip_count(comps[cond.group(1)])
+                    if cond and cond.group(1) in comps else 1)
+                if body:
+                    visit(body.group(1), mult * trips)
+                continue
+            if ins.op in ("reshape", "bitcast", "tuple", "get-tuple-element",
+                          "constant", "conditional", "call", "parameter"):
+                continue
+            out_b = _shape_bytes(ins.shape)
+            if ins.op in ("dynamic-slice", "gather"):
+                total = 2 * out_b
+            elif ins.op == "dynamic-update-slice":
+                upd = _shape_bytes(comp.shapes.get(ins.operands[1], "")) \
+                    if len(ins.operands) > 1 else 0
+                total = 2 * upd
+            else:
+                opb = sum(_shape_bytes(comp.shapes.get(o, ""))
+                          for o in ins.operands)
+                total = opb + out_b
+            meta = re.search(r'op_name="([^"]{0,90})', ins.raw)
+            key = (f"{ins.op} {ins.shape[:36]} x{mult:.0f} :: "
+                   f"{meta.group(1)[-60:] if meta else ''}")
+            by_instr[key] += total * mult
+
+    visit(entry, 1.0)
+    print(f"total bytes (unfused model): {sum(by_instr.values()):.3e}")
+    for k, b in by_instr.most_common(top):
+        print(f"{b:.3e}  {k}")
+
+
+if __name__ == "__main__":
+    breakdown(sys.argv[1], int(sys.argv[2]) if len(sys.argv) > 2 else 18)

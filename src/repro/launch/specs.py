@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+Mirrors the shannon/kernels dry-run pattern: weak-type-correct, shardable,
+zero allocation. Modality frontends are stubs per the assignment —
+``enc_frames`` / ``prefix_embeds`` are precomputed embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DECODE, ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig
+                      ) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    text = s - cfg.prefix_len
+    batch = {
+        "tokens": SDS((b, text), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+        "loss_mask": SDS((b, s), jnp.float32),
+    }
+    if cfg.enc_dec:
+        batch["enc_frames"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.prefix_len:
+        batch["prefix_embeds"] = SDS((b, cfg.prefix_len, cfg.d_model),
+                                     jnp.bfloat16)
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, rt: tfm.ModelRuntime, batch: int,
+                   enc_len: int = 0):
+    """(ShapeDtypeStruct cache tree, logical-axes specs) without allocation."""
+    holder = {}
+
+    def go():
+        c, s = tfm.init_cache(cfg, rt, batch, enc_len)
+        holder["specs"] = s
+        return c
+
+    shapes = jax.eval_shape(go)
+    return shapes, holder["specs"]
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                       rt: tfm.ModelRuntime):
+    b = shape.global_batch
+    enc_len = shape.seq_len if cfg.enc_dec else 0
+    cache, cache_specs = abstract_cache(cfg, rt, b, enc_len)
+    return {
+        "tokens": SDS((b,), jnp.int32),
+        "pos": SDS((), jnp.int32),
+        "cache": cache,
+    }, cache_specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                rt: tfm.ModelRuntime) -> Tuple[Dict[str, Any], Any]:
+    """Returns (specs dict, cache logical specs or None)."""
+    if shape.kind == DECODE:
+        return decode_input_specs(cfg, shape, rt)
+    return train_batch_specs(cfg, shape), None

@@ -1,0 +1,277 @@
+"""Attention: GQA/MQA, causal / sliding-window / cross, logit softcap.
+
+Head layout: Q heads are stored FLAT as ``H = kv_heads * group`` (group-major:
+q head ``h`` reads kv head ``h // group``), because a single TP mesh axis can
+shard the flat head dim even when neither kv_heads nor group alone divides
+the TP degree (qwen2: 8 kv x 8 group over tp=16). TP head-padding happens
+*inside* groups (group padded: deepseek 7->8/group) or on kv heads for MHA
+(whisper 6->16); a static ``head_mask`` zeroes padded heads' outputs so
+padding never changes the math and padded Wo rows get zero gradient.
+
+K/V projections are small (kv_heads <= 8) and kept replicated under TP; the
+``repeat`` to flat heads is a local slice of a replicated tensor (no comms).
+
+Implementations:
+  naive      - full score matrix (oracle / tiny shapes)
+  blockwise  - scan over Q blocks, online-softmax scan over KV blocks
+               (flash structure in pure jnp; the dry-run path)
+  local      - sliding window with *static* KV slices per Q block: compute
+               scales with window, not seq^2
+  pallas     - kernels/flash_attention (TPU fast path; interpret for tests)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamBuilder, rope, softcap
+
+Params = Dict[str, Any]
+
+NEG_INF = -2.0e38
+
+
+class HeadLayout(NamedTuple):
+    kv_heads: int        # physical (possibly padded for MHA) KV heads
+    group: int           # physical Q heads per KV head (possibly padded)
+    real_kv: int
+    real_group: int
+
+    @property
+    def q_heads(self) -> int:
+        return self.kv_heads * self.group
+
+    def head_mask(self) -> jax.Array:
+        h = jnp.arange(self.q_heads)
+        return ((h % self.group < self.real_group) &
+                (h // self.group < self.real_kv)).astype(jnp.bfloat16)
+
+
+def make_head_layout(n_heads: int, n_kv_heads: int, tp: int) -> HeadLayout:
+    """Pad Q heads (inside groups / kv for MHA) so q_heads % tp == 0."""
+    if n_heads == n_kv_heads:  # MHA: pad kv heads alongside
+        kh = n_heads if n_heads % tp == 0 else \
+            (n_heads + tp - 1) // tp * tp
+        return HeadLayout(kh, 1, n_heads, 1)
+    g = n_heads // n_kv_heads
+    g_pad = g
+    while (n_kv_heads * g_pad) % tp:
+        g_pad += 1
+    return HeadLayout(n_kv_heads, g_pad, n_kv_heads, g)
+
+
+def repeat_kv(k: jax.Array, group: int) -> jax.Array:
+    """[..., Kh, Dh] -> [..., Kh*group, Dh] (local expand of replicated kv)."""
+    if group == 1:
+        return k
+    return jnp.repeat(k, group, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(pb: ParamBuilder, d: int, layout: HeadLayout, dh: int,
+                   *, qkv_bias: bool = False, linear_bias: bool = False):
+    h, kh = layout.q_heads, layout.kv_heads
+    pb.param("wq", (d, h, dh), (None, "heads", None), init="fan_in")
+    pb.param("wk", (d, kh, dh), (None, None, None), init="fan_in")
+    pb.param("wv", (d, kh, dh), (None, None, None), init="fan_in")
+    pb.param("wo", (h, dh, d), ("heads", None, None), init="fan_in")
+    if qkv_bias or linear_bias:
+        pb.param("bq", (h, dh), ("heads", None), init="zeros")
+        pb.param("bk", (kh, dh), (None, None), init="zeros")
+        pb.param("bv", (kh, dh), (None, None), init="zeros")
+    if linear_bias:
+        pb.param("bo", (d,), (None,), init="zeros")
+
+
+def qkv_project(p: Params, x: jax.Array, kv_x: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: [B,S,D] -> q [B,S,H,Dh], k/v [B,Skv,Kh,Dh]."""
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def out_project(p: Params, o: jax.Array, head_mask: jax.Array) -> jax.Array:
+    """o: [B,S,H,Dh] -> [B,S,D]; padded heads masked to keep math exact."""
+    o = o * head_mask[:, None].astype(o.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (flat heads; kv repeated locally)
+# ---------------------------------------------------------------------------
+
+def naive_attention(q, k, v, *, causal: bool, window: int = 0,
+                    cap: float = 0.0, q_offset: int = 0) -> jax.Array:
+    """Oracle. q [B,Sq,H,Dh]; k,v [B,Sk,Kh,Dh] -> [B,Sq,H,Dh]."""
+    g = q.shape[2] // k.shape[2]
+    kk, vv = repeat_kv(k, g), repeat_kv(v, g)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bshd->bhqs", q, kk).astype(jnp.float32) * scale
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(q.shape[1]) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p.astype(vv.dtype), vv)
+
+
+def _online_block(carry, k_blk, v_blk, q_blk, mask, scale, cap):
+    """One online-softmax step. carry = (o, m, l). q_blk [B,bq,H,D];
+    k_blk/v_blk [B,bk,H,D] (already repeated)."""
+    o, m, l = carry
+    s = jnp.einsum("bqhd,bshd->bhqs", q_blk, k_blk).astype(jnp.float32)
+    s = s * scale
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    m_safe = jnp.maximum(m_new, -1e30)
+    p = jnp.exp(s - m_safe[..., None])
+    alpha = jnp.exp(jnp.maximum(m, -1e30) - m_safe)
+    l_new = l * alpha + p.sum(axis=-1)
+    pv = jnp.einsum("bhqs,bshd->bhqd", p.astype(v_blk.dtype), v_blk)
+    o_new = o * alpha[..., None].astype(o.dtype) + pv.astype(o.dtype)
+    return o_new, m_new, l_new
+
+
+def blockwise_attention(q, k, v, *, causal: bool, cap: float = 0.0,
+                        q_offset: int = 0, bq: int = 512,
+                        bk: int = 512) -> jax.Array:
+    """Flash-structured attention in jnp (scan over Q and KV blocks)."""
+    B, Sq, H, Dh = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    g = H // Kh
+    kk, vv = repeat_kv(k, g), repeat_kv(v, g)
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    scale = Dh ** -0.5
+    nq, nk = Sq // bq, Sk // bk
+    q_blocks = q.reshape(B, nq, bq, H, Dh).transpose(1, 0, 2, 3, 4)
+    k_blocks = kk.reshape(B, nk, bk, H, Dh).transpose(1, 0, 2, 3, 4)
+    v_blocks = vv.reshape(B, nk, bk, H, Dh).transpose(1, 0, 2, 3, 4)
+
+    def per_q_block(qi, q_blk):
+        qpos = qi * bq + jnp.arange(bq) + q_offset
+
+        def kv_step(carry, xs):
+            ki, k_blk, v_blk = xs
+            kpos = ki * bk + jnp.arange(bk)
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            return _online_block(carry, k_blk, v_blk, q_blk, mask, scale,
+                                 cap), None
+
+        o0 = jnp.zeros((B, H, bq, Dh), jnp.float32)
+        m0 = jnp.full((B, H, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(
+            kv_step, (o0, m0, l0), (jnp.arange(nk), k_blocks, v_blocks))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return o.transpose(0, 2, 1, 3)  # [B,bq,H,Dh]
+
+    out = jax.lax.map(lambda xs: per_q_block(*xs), (jnp.arange(nq), q_blocks))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def local_attention(q, k, v, *, window: int, cap: float = 0.0,
+                    bq: int = 512) -> jax.Array:
+    """Sliding-window causal attention with static KV slices per Q block.
+
+    Compute per Q block covers exactly span = window + bq keys ending at the
+    block's last row -> cost O(S * window), not O(S^2).
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    assert Sq == Sk, "local attention is self-attention"
+    g = H // Kh
+    kk, vv = repeat_kv(k, g), repeat_kv(v, g)
+    bq = min(bq, Sq)
+    span = min(window + bq, Sk)  # static slice length
+    scale = Dh ** -0.5
+    nq = Sq // bq
+    q_blocks = q.reshape(B, nq, bq, H, Dh).transpose(1, 0, 2, 3, 4)
+
+    def per_q_block(qi, q_blk):
+        qs = qi * bq
+        start = jnp.clip(qs + bq - span, 0, Sk - span)
+        k_sl = jax.lax.dynamic_slice_in_dim(kk, start, span, axis=1)
+        v_sl = jax.lax.dynamic_slice_in_dim(vv, start, span, axis=1)
+        qpos = qs + jnp.arange(bq)
+        kpos = start + jnp.arange(span)
+        mask = (qpos[:, None] >= kpos[None, :]) & \
+               (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.einsum("bqhd,bshd->bhqs", q_blk, k_sl).astype(jnp.float32)
+        s = s * scale
+        if cap > 0:
+            s = cap * jnp.tanh(s / cap)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqs,bshd->bqhd", p.astype(v_sl.dtype), v_sl)
+
+    out = jax.lax.map(lambda xs: per_q_block(*xs), (jnp.arange(nq), q_blocks))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def attend(q, k, v, *, causal: bool, window: int = 0, cap: float = 0.0,
+           impl: str = "blockwise", q_offset: int = 0) -> jax.Array:
+    """Dispatch over implementations. q [B,S,H,D]; k,v [B,Sk,Kh,D]."""
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, causal=causal, window=window, cap=cap,
+            interpret=(impl == "interpret"))
+    if impl == "naive" or q.shape[1] < 8:
+        return naive_attention(q, k, v, causal=causal, window=window, cap=cap,
+                               q_offset=q_offset)
+    if window > 0 and q_offset == 0 and causal:
+        return local_attention(q, k, v, window=window, cap=cap)
+    return blockwise_attention(q, k, v, causal=causal, cap=cap,
+                               q_offset=q_offset)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache) - jnp fallback.
+# distributed/decode_attn.py provides the sequence-sharded flash-decoding
+# version with the same signature.
+# ---------------------------------------------------------------------------
+
+def decode_attend(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                  k_pos: jax.Array, pos: jax.Array, *, window: int = 0,
+                  cap: float = 0.0) -> jax.Array:
+    """q [B,H,Dh]; caches [B,Sc,Kh,Dh]; k_pos [B,Sc] absolute positions
+    (-1 = empty). Returns [B,H,Dh]."""
+    g = q.shape[1] // k_cache.shape[2]
+    kk, vv = repeat_kv(k_cache, g), repeat_kv(v_cache, g)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhd,bshd->bhs", q, kk).astype(jnp.float32) * scale
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    if window > 0:
+        valid &= k_pos > pos - window
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p.astype(vv.dtype), vv)

@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block: x -> { gate branch: gelu(W_gate x) ;
+              rec branch:  conv1d_4(W_in x) -> RG-LRU }
+       out = W_out (rglru_out * gate)
+
+RG-LRU (per channel): r_t = sigmoid(BD_a(x_t)); i_t = sigmoid(BD_x(x_t))
+  log a_t = -c * softplus(Lambda) * r_t           (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+Gate projections BD_* are block-diagonal with n_heads blocks (as in
+RecurrentGemma). Training uses an associative scan over time; the Pallas
+kernel (kernels/rglru) is the TPU fast path with identical semantics.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamBuilder, conv1d_channels
+
+Params = Dict[str, Any]
+C_RGLRU = 8.0
+
+
+def init_rglru(pb: ParamBuilder, cfg: ModelConfig) -> None:
+    d = cfg.d_model
+    w = cfg.rglru.width or d
+    nb = cfg.n_heads
+    bs = w // nb
+    pb.param("w_in", (d, w), (None, "rglru"), init="fan_in")
+    pb.param("w_gate", (d, w), (None, "rglru"), init="fan_in")
+    pb.param("conv_w", (w, cfg.rglru.conv_width), ("rglru", None),
+             init="fan_in")
+    pb.param("conv_b", (w,), ("rglru",), init="zeros")
+    pb.param("bd_a", (nb, bs, bs), ("rglru_heads", None, None), init="fan_in")
+    pb.param("bd_a_bias", (nb, bs), ("rglru_heads", None), init="zeros")
+    pb.param("bd_x", (nb, bs, bs), ("rglru_heads", None, None), init="fan_in")
+    pb.param("bd_x_bias", (nb, bs), ("rglru_heads", None), init="zeros")
+    pb.param("lam", (w,), ("rglru",), init="lru_lambda")
+    pb.param("w_out", (w, d), ("rglru", None), init="fan_in")
+
+
+def _gates(p: Params, xr: jax.Array, nb: int) -> Tuple[jax.Array, jax.Array]:
+    """Block-diagonal gate projections. xr: [..., W] -> (log_a, i) in f32."""
+    shp = xr.shape
+    xb = xr.reshape(shp[:-1] + (nb, shp[-1] // nb))
+    r = jnp.einsum("...hb,hbc->...hc", xb, p["bd_a"]) + p["bd_a_bias"]
+    i = jnp.einsum("...hb,hbc->...hc", xb, p["bd_x"]) + p["bd_x_bias"]
+    r = jax.nn.sigmoid(r.astype(jnp.float32)).reshape(shp)
+    i = jax.nn.sigmoid(i.astype(jnp.float32)).reshape(shp)
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    return log_a, i
+
+
+def rglru_scan(log_a: jax.Array, gated_x: jax.Array) -> jax.Array:
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+
+    log_a, gated_x: [B, S, W] (f32). Returns h: [B, S, W].
+    """
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12)) * gated_x
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rglru(p: Params, x: jax.Array, cfg: ModelConfig,
+                state: Optional[Params] = None, impl: str = "jnp",
+                return_state: bool = False
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """x: [B,S,D]. state (decode): {'h': [B,W], 'conv': [B,K-1,W]}.
+
+    Returns (y [B,S,D], new_state or None).
+    """
+    nb = cfg.n_heads
+    k = cfg.rglru.conv_width
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    xr = jnp.einsum("bsd,dw->bsw", x, p["w_in"])
+    conv_carry = None if state is None else state["conv"]
+    new_conv = None
+    if state is not None or return_state:
+        prev = conv_carry if conv_carry is not None else \
+            jnp.zeros(xr.shape[:1] + (k - 1, xr.shape[-1]), xr.dtype)
+        new_conv = jnp.concatenate([prev.astype(xr.dtype), xr],
+                                   axis=1)[:, -(k - 1):]
+    xr = conv1d_channels(xr, p["conv_w"], conv_carry) + p["conv_b"]
+    log_a, i = _gates(p, xr, nb)
+    gated = i * xr.astype(jnp.float32)
+
+    if state is None:  # training / prefill over full sequence
+        if impl in ("pallas", "interpret"):
+            from repro.kernels.rglru import ops as rg_ops
+            h = rg_ops.rglru(log_a, gated,
+                             block=cfg.rglru.block_width,
+                             interpret=(impl == "interpret"))
+        else:
+            h = rglru_scan(log_a, gated)
+        new_state = {"h": h[:, -1], "conv": new_conv} if return_state else None
+        y = h.astype(x.dtype)
+    else:  # single-step decode: S == 1
+        a = jnp.exp(log_a[:, 0])
+        b = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a[:, 0]), 1e-12)) \
+            * gated[:, 0]
+        h1 = a * state["h"] + b
+        new_state = {"h": h1, "conv": new_conv}
+        y = h1[:, None].astype(x.dtype)
+    y = jnp.einsum("bsw,wd->bsd", y * gate.astype(y.dtype), p["w_out"])
+    return y, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> Params:
+    w = cfg.rglru.width or cfg.d_model
+    k = cfg.rglru.conv_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, k - 1, w), jnp.bfloat16)}

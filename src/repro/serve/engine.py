@@ -1,0 +1,69 @@
+"""Serving engine: prefill + batched decode with pmem KV spill (SLM mode).
+
+The engine drives models/transformer's prefill/decode with jitted steps.
+Idle or preempted sequences' KV caches can be *spilled* to the node's
+B-APM (object store) and resumed later — long-context serving state
+outlives DRAM pressure and even process restarts, which is precisely the
+paper's persistent-memory serving story.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.object_store import PMemObjectStore
+from repro.models import transformer as tfm
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, rt: tfm.ModelRuntime, params,
+                 store: Optional[PMemObjectStore] = None):
+        self.cfg = cfg
+        self.rt = rt
+        self.params = params
+        self.store = store
+        self.cache = None
+        self.pos = 0
+        self._decode = jax.jit(
+            lambda p, c, t, pos: tfm.decode_step(p, cfg, rt, c, t, pos))
+        self._prefill = jax.jit(
+            functools.partial(tfm.prefill, cfg=cfg, rt=rt),
+            static_argnames=())
+
+    # ---- lifecycle ----
+    def prefill(self, tokens: np.ndarray, **frontend) -> np.ndarray:
+        logits, cache = tfm.prefill(self.params, self.cfg, self.rt,
+                                    jnp.asarray(tokens), **frontend)
+        self.cache = cache
+        self.pos = tokens.shape[1] + self.cfg.prefix_len
+        return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+    def decode(self, first_tokens: np.ndarray, steps: int) -> np.ndarray:
+        toks = jnp.asarray(first_tokens)
+        out = [np.asarray(toks)]
+        for i in range(steps):
+            logits, self.cache = self._decode(
+                self.params, self.cache, toks, jnp.int32(self.pos))
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self.pos += 1
+            out.append(np.asarray(toks))
+        return np.stack(out, axis=1)
+
+    # ---- pmem spill (SLM): persist serving state, restore later ----
+    def spill(self, name: str) -> None:
+        assert self.store is not None, "no pmem store attached"
+        host = jax.tree.map(np.asarray, self.cache)
+        self.store.put(f"serve/{name}", {"cache": host,
+                                         "pos": np.int32(self.pos)})
+        self.cache = None  # DRAM freed
+
+    def resume(self, name: str) -> None:
+        assert self.store is not None
+        obj = self.store.get(f"serve/{name}")
+        self.cache = jax.tree.map(jnp.asarray, obj["cache"])
+        self.pos = int(obj["pos"])

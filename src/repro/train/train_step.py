@@ -1,0 +1,137 @@
+"""Sharded train step: chunked vocab-parallel CE, microbatch grad
+accumulation, remat, AdamW(+ZeRO) update.
+
+Cross-entropy never materializes [B, S, V] logits: a rematted scan over
+sequence chunks computes logits for `ce_chunk` positions at a time against
+the vocab-sharded unembedding, with the log-sum-exp reduced across the
+vocab shards by GSPMD. Padded vocab columns are masked to -inf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import transformer as tfm
+from repro.models.layers import softcap
+from repro.train import optimizer as opt
+
+Params = Dict[str, Any]
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def chunked_ce_loss(hidden: jax.Array, out_embed: jax.Array,
+                    labels: jax.Array, mask: jax.Array, cfg: ModelConfig,
+                    constrain: Callable, chunk: int = 512
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """hidden [B,S,D]; labels/mask [B,S]. Returns (sum_nll, sum_mask)."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    v = cfg.vocab_size
+    vp = out_embed.shape[-1]
+    vocab_valid = jnp.arange(vp) < v
+
+    hs = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, lbl, msk = xs
+        logits = jnp.einsum("bsd,dv->bsv", h, out_embed)
+        logits = constrain(logits, "logits")
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        logits = jnp.where(vocab_valid, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lbl_logit = jnp.take_along_axis(
+            logits, lbl[..., None], axis=-1)[..., 0]
+        nll = (lse - lbl_logit) * msk
+        return (carry[0] + nll.sum(), carry[1] + msk.sum()), None
+
+    (nll_sum, msk_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ls, ms))
+    return nll_sum, msk_sum
+
+
+def make_loss_fn(cfg: ModelConfig, rt: tfm.ModelRuntime,
+                 constrain: Callable, ce_chunk: int = 512):
+    def loss_fn(params: Params, batch: Dict[str, jax.Array]):
+        hidden, _, aux = tfm.forward(
+            params, cfg, rt, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_frames=batch.get("enc_frames"))
+        nll_sum, msk_sum = chunked_ce_loss(
+            hidden, params["out_embed"], batch["labels"], batch["loss_mask"],
+            cfg, constrain, ce_chunk)
+        loss = nll_sum / jnp.maximum(msk_sum, 1.0) + AUX_WEIGHT * aux
+        return loss, {"nll": nll_sum, "ntok": msk_sum, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, rt: tfm.ModelRuntime,
+                    constrain: Callable, adamw: opt.AdamWConfig,
+                    microbatches: int = 1, ce_chunk: int = 512,
+                    grad_shardings=None, accum_dtype=jnp.float32):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). batch dims are [global_batch, ...].
+
+    grad_shardings (optional): NamedSharding tree for the f32 gradient
+    accumulator — pass the ZeRO (data-sharded) shardings so the accumulator
+    is reduce-scattered across DP instead of replicated (ZeRO-2).
+    """
+    loss_fn = make_loss_fn(cfg, rt, constrain, ce_chunk)
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+
+    def shard_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            g, grad_shardings)
+
+    def train_step(params: Params, opt_state: Params,
+                   batch: Dict[str, jax.Array]):
+        if microbatches == 1:
+            grads, metrics = grad_fn(params, batch)
+            grads = shard_grads(grads)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(accum_dtype), g_acc, g)
+                g_acc = shard_grads(g_acc)
+                m_acc = jax.tree.map(lambda a, b_: a + b_, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = shard_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+            m0 = {"nll": jnp.zeros((), jnp.float32),
+                  "ntok": jnp.zeros((), jnp.float32),
+                  "aux": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(acc_step, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        new_params, new_state, gnorm = opt.apply_updates(
+            params, grads, opt_state, adamw)
+        loss = metrics["nll"] / jnp.maximum(metrics["ntok"], 1.0)
+        out_metrics = {"loss": loss, "grad_norm": gnorm,
+                       "aux": metrics["aux"],
+                       "step": new_state["step"].astype(jnp.float32)}
+        return new_params, new_state, out_metrics
+
+    return train_step

@@ -1,0 +1,26 @@
+import tempfile
+from pathlib import Path
+
+import pytest
+
+# NOTE: no XLA_FLAGS here by design — smoke tests must see the real (1)
+# device count. Multi-device distributed tests run in subprocesses
+# (tests/test_distributed.py) with their own device-count env.
+
+
+@pytest.fixture()
+def cluster():
+    from repro.core.cluster import SimCluster
+    root = Path(tempfile.mkdtemp(prefix="repro_test_"))
+    c = SimCluster(root, n_nodes=4)
+    yield c
+    c.shutdown()
+
+
+@pytest.fixture()
+def cluster_delta():
+    from repro.core.cluster import SimCluster
+    root = Path(tempfile.mkdtemp(prefix="repro_test_"))
+    c = SimCluster(root, n_nodes=4, delta=True)
+    yield c
+    c.shutdown()

@@ -1,0 +1,73 @@
+"""The trip-count-aware HLO analyzer must reproduce hand-computed FLOPs."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze, parse_hlo
+
+
+def _compile(fn, *shapes):
+    return jax.jit(fn).lower(*shapes).compile()
+
+
+def test_scan_trip_counts():
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 256), jnp.float32)
+
+    def scanned(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    c = _compile(scanned, x, w)
+    res = analyze(c.as_text(), 1)
+    expect = 2 * 32 * 256 * 256 * 10
+    assert abs(res["flops"] - expect) / expect < 1e-6
+
+
+def test_nested_scans():
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((16, 128), jnp.float32)
+
+    def nested(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    c = _compile(nested, x, w)
+    res = analyze(c.as_text(), 1)
+    expect = 2 * 16 * 128 * 128 * 20
+    assert abs(res["flops"] - expect) / expect < 1e-6
+
+
+def test_remat_counts_recompute():
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((16, 128), jnp.float32)
+
+    def loss(x, w):
+        def body(c, _):
+            return jax.checkpoint(lambda a: jnp.tanh(a @ w))(c), None
+        y, _ = jax.lax.scan(body, x, None, length=6)
+        return (y.astype(jnp.float32) ** 2).sum()
+
+    c = _compile(jax.grad(loss, argnums=1), x, w)
+    res = analyze(c.as_text(), 1)
+    one = 2 * 16 * 128 * 128
+    # fwd + recompute + 2 bwd matmuls = 4x per layer
+    expect = 4 * one * 6
+    assert 0.9 * expect < res["flops"] < 1.35 * expect, \
+        (res["flops"], expect)
+
+
+def test_parse_hlo_computations():
+    x = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    c = _compile(lambda a: a @ a, x)
+    comps = parse_hlo(c.as_text())
+    assert any("main" in n for n in comps)
+    res = analyze(c.as_text(), 1)
+    assert res["flops"] == 2 * 8 * 8 * 8
+    assert res["bytes"] > 0

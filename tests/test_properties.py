@@ -1,0 +1,147 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+SET = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# codec: quantization error is bounded by the per-tile scale, roundtrip of
+# identical tensors is exact zero-delta
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(st.integers(1, 5000), st.integers(0, 2 ** 31 - 1),
+       st.floats(1e-4, 10.0))
+def test_codec_error_bound(n, seed, spread):
+    from repro.kernels.ckpt_codec.ref import decode_ref, encode_ref
+    r = np.random.RandomState(seed % 100000)
+    base = (r.randn(n) * spread).astype(np.float32)
+    new = base + (r.randn(n) * spread * 0.01).astype(np.float32)
+    pad = (-n) % 1024
+    bp = np.pad(base, (0, pad)).reshape(-1, 1024)
+    np_ = np.pad(new, (0, pad)).reshape(-1, 1024)
+    q, s = encode_ref(np_, bp)
+    dec = decode_ref(q, s, bp)
+    err = np.abs(dec - np_)
+    assert (err <= s + 1e-7).all()
+
+
+@settings(**SET)
+@given(st.integers(1, 3000), st.integers(0, 2 ** 31 - 1))
+def test_codec_identity_is_exact(n, seed):
+    from repro.kernels.ckpt_codec.ref import decode_ref, encode_ref
+    r = np.random.RandomState(seed % 100000)
+    base = r.randn(((n + 1023) // 1024) * 1024).astype(np.float32) \
+        .reshape(-1, 1024)
+    q, s = encode_ref(base, base)
+    assert (q == 0).all()
+    dec = decode_ref(q, s, base)
+    np.testing.assert_array_equal(dec, base)
+
+
+# ---------------------------------------------------------------------------
+# attention: causal masking means future tokens never leak
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 4),
+       st.sampled_from([0, 8]))
+def test_attention_causality(seed, heads, window):
+    from repro.models.attention import naive_attention
+    r = np.random.RandomState(seed % 100000)
+    B, S, Dh = 1, 16, 8
+    q = jnp.asarray(r.randn(B, S, 1, heads * Dh).reshape(B, S, heads, Dh)
+                    .astype(np.float32))
+    k = jnp.asarray(r.randn(B, S, 1, Dh).astype(np.float32))
+    v = jnp.asarray(r.randn(B, S, 1, Dh).astype(np.float32))
+    o1 = naive_attention(q, k, v, causal=True, window=window)
+    k2 = k.at[:, -1].set(k[:, -1] + 100.0)
+    v2 = v.at[:, -1].set(v[:, -1] - 100.0)
+    o2 = naive_attention(q, k2, v2, causal=True, window=window)
+    np.testing.assert_array_equal(np.asarray(o1[:, :-1]),
+                                  np.asarray(o2[:, :-1]))
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU: |a| < 1 -> bounded state for bounded inputs
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(8, 64))
+def test_rglru_stability(seed, s):
+    """Worst-case gain of h_t = a h + sqrt(1-a^2) x for constant x is
+    sqrt((1+a)/(1-a)); the scan must never exceed it."""
+    from repro.models.rglru import rglru_scan
+    r = np.random.RandomState(seed % 100000)
+    log_a = jnp.asarray(-np.abs(r.randn(1, s, 8)).astype(np.float32) - 1e-4)
+    x = jnp.asarray(np.clip(r.randn(1, s, 8), -3, 3).astype(np.float32))
+    h = rglru_scan(log_a, x)
+    a_max = float(jnp.exp(log_a.max()))
+    gain = np.sqrt((1 + a_max) / (1 - a_max))
+    assert float(jnp.max(jnp.abs(h))) <= 3.0 * gain + 1e-3
+    assert bool(jnp.isfinite(h).all())
+
+
+# ---------------------------------------------------------------------------
+# sharding: _fit_pspec never assigns a non-dividing axis
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=3))
+def test_fit_pspec_divisibility(dims):
+    import os
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import _axes_size, _fit_pspec
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))  # single-device mesh
+    ps = _fit_pspec(P(*(["model"] * len(dims))), tuple(dims), mesh)
+    for entry, d in zip(ps, dims):
+        assert d % _axes_size(entry, mesh) == 0
+
+
+# ---------------------------------------------------------------------------
+# MoE router: top-k gates are normalized and selected experts are distinct
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_router_normalized(seed):
+    from repro.configs import registry
+    from repro.models.layers import ParamBuilder
+    from repro.models.moe import init_moe, make_moe_layout, router_probs
+    cfg = registry.get_smoke_config("grok-1-314b")
+    pb = ParamBuilder(jax.random.PRNGKey(seed % 100000))
+    init_moe(pb, cfg, make_moe_layout(cfg, 1))
+    x = jax.random.normal(jax.random.PRNGKey(1), (10, cfg.d_model))
+    gates, ids, probs = router_probs(pb.params, x, cfg)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-5)
+    assert (np.asarray(ids[..., 0]) != np.asarray(ids[..., 1])).all()
+
+
+# ---------------------------------------------------------------------------
+# object store: put/get is the identity for arbitrary small pytrees
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.lists(st.tuples(st.integers(1, 8), st.integers(1, 8)), min_size=1,
+                max_size=4),
+       st.sampled_from([np.float32, np.int32, np.float16]))
+def test_object_store_identity(seed, shapes, dtype):
+    import tempfile
+    from pathlib import Path
+    from repro.core.object_store import PMemObjectStore
+    from repro.core.pmem import PMemPool
+    pool = PMemPool(Path(tempfile.mkdtemp()), "n0")
+    store = PMemObjectStore(pool)
+    r = np.random.RandomState(seed % 100000)
+    tree = {f"k{i}": (r.randn(*s) * 10).astype(dtype)
+            for i, s in enumerate(shapes)}
+    store.put("t", tree)
+    out = store.get("t", verify=True)
+    for k in tree:
+        np.testing.assert_array_equal(out[k], tree[k])
