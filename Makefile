@@ -1,0 +1,19 @@
+# Developer entry points. `make verify` is the tier-1 gate every PR must
+# keep green (same command CI runs).
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify test-fast bench lint
+
+verify:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py
+
+lint:
+	$(PY) -m pyflakes src tests benchmarks 2>/dev/null || \
+	$(PY) -m py_compile $$(find src tests benchmarks -name '*.py')

@@ -1,0 +1,91 @@
+"""TieredIO: per-step checkpoint overhead, blocking vs async, and
+burst-buffer stage-in hit rate.
+
+The paper's claim (Fig. 4 / Fig. 8): with a node-local B-APM tier and an
+async data scheduler, the application step pays neither for the external
+tier nor for the pmem write — only for handing the state over. Three
+modes are timed over a short synthetic "training" run:
+
+  blocking_external : state pickled straight to the throttled external
+                      filesystem inside the step (no B-APM at all);
+  blocking_pmem     : node-local shadow-slot write inside the step
+                      (B-APM present, but synchronous use of it);
+  tiered_async      : ``TieredIO.save_async`` — the step pays only the
+                      submit; write + drain overlap the next step.
+
+Plus the Fig. 8 staging path: a consumer walks shards twice with
+``TieredIO.stage_in`` pre-loading; the second pass must be all hits.
+"""
+from __future__ import annotations
+
+import statistics
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.cluster import SimCluster
+
+STATE_MB = 16
+EXTERNAL_BW = 100e6
+STEPS = 6
+COMPUTE_S = 0.02  # emulated per-step compute
+
+
+def _state(seed=0):
+    n = STATE_MB * (1 << 20) // 4
+    return {"w": np.random.RandomState(seed).randn(1 << 9, n >> 9)
+            .astype(np.float32)}
+
+
+def _run_mode(mode: str) -> float:
+    root = Path(tempfile.mkdtemp())
+    c = SimCluster(root, n_nodes=2, buddy=False,
+                   external_bandwidth=EXTERNAL_BW)
+    state = _state()
+    per_step = []
+    for step in range(1, STEPS + 1):
+        time.sleep(COMPUTE_S)  # the "compute" the I/O should overlap
+        t0 = time.perf_counter()
+        if mode == "blocking_external":
+            c.external.put(f"ckpt{step}", state)
+        elif mode == "blocking_pmem":
+            c.checkpointer.save(step, state, drain=True)
+        elif mode == "tiered_async":
+            c.tiered.save_async(step, state, drain=True)
+        per_step.append(time.perf_counter() - t0)
+    c.tiered.quiesce()
+    c.checkpointer.wait_async()
+    c.shutdown()
+    # median: container-fs fsync latency spikes would dominate a mean
+    return statistics.median(per_step)
+
+
+def run():
+    rows = []
+    blocking_ext = _run_mode("blocking_external")
+    blocking_pmem = _run_mode("blocking_pmem")
+    tiered = _run_mode("tiered_async")
+    rows.append(("tiered_ckpt_blocking_external_step", blocking_ext * 1e6,
+                 "pays_external_bw"))
+    rows.append(("tiered_ckpt_blocking_pmem_step", blocking_pmem * 1e6,
+                 f"speedup={blocking_ext / blocking_pmem:.1f}x"))
+    rows.append(("tiered_ckpt_async_step", tiered * 1e6,
+                 f"speedup_vs_blocking_pmem={blocking_pmem / tiered:.1f}x"))
+
+    # ---- burst-buffer stage-in hit rate (Fig. 8) ----
+    root = Path(tempfile.mkdtemp())
+    c = SimCluster(root, n_nodes=2, external_bandwidth=EXTERNAL_BW)
+    shard = {"tokens": np.arange(1 << 18, dtype=np.int32)}
+    names = [f"shard{i}" for i in range(4)]
+    for n in names:
+        c.external.put(n, shard)
+    for _ in range(2):  # second epoch: every shard already resident
+        for f in c.tiered.stage_in("node0", names):
+            f.result()
+    rows.append(("tiered_stage_in_hit_rate", c.tiered.stage_in_hit_rate(),
+                 f"hits={c.tiered.stats['stage_in_hits']}"
+                 f"/loads={c.tiered.stats['stage_in_loads']}"))
+    c.shutdown()
+    return rows

@@ -62,35 +62,110 @@ class DistributedCheckpointer:
         self.external = external
         self.buddy = buddy
         self.delta = delta
+        if delta and slots < 2:
+            raise ValueError(
+                "delta checkpointing needs slots >= 2: the full base "
+                "must survive while deltas rotate through other slots")
         self.slots = slots
         self._pending: List = []
+        self._slot_counter: Optional[int] = None
 
     # ------------------------------------------------------------------
     def _meta_store(self) -> PMemObjectStore:
         return self.stores[self.nodes[0]]
 
-    def _slot(self, step: int) -> int:
-        return step % self.slots
+    def _meta_put_json(self, name: str, obj) -> None:
+        """Replicate small metadata (manifests, latest-pointer) to every
+        live node's pool, so losing any single node — including the
+        first — never loses the checkpoint index."""
+        wrote = 0
+        for nid in self._live_nodes():
+            try:
+                self.stores[nid].pool.put_json(name, obj)
+                wrote += 1
+            except IOError:
+                continue
+        if not wrote:
+            raise IOError(f"no reachable pool for metadata {name}")
 
-    def buddy_of(self, nid: str) -> str:
-        i = self.nodes.index(nid)
-        return self.nodes[(i + 1) % len(self.nodes)]
+    def _meta_get_json(self, name: str):
+        err: Optional[Exception] = None
+        for nid in self.nodes:
+            try:
+                return self.stores[nid].pool.get_json(name)
+            except (IOError, FileNotFoundError) as e:
+                err = e
+        raise err if err is not None else FileNotFoundError(name)
+
+    def _alloc_slot(self, avoid: Optional[int] = None) -> int:
+        """Round-robin slot rotation. Raw ``step % slots`` degenerates to
+        a single slot whenever the checkpoint stride shares a factor with
+        ``slots`` (e.g. ckpt_every=2), which would void the shadow-slot
+        crash guarantee; a per-save ordinal cannot. Initialised from the
+        last committed manifest so restarts keep rotating.
+
+        ``avoid`` pins a slot that must NOT be overwritten — the slot
+        holding the active delta base. With slots=2 every delta save then
+        reuses the non-base slot; a crash mid-delta-write falls back to
+        the full base (caught by ``_check_slot_step``) instead of
+        destroying the base and orphaning the whole chain."""
+        if self._slot_counter is None:
+            step = self.latest_step()
+            if step is None:
+                self._slot_counter = 0
+            else:
+                try:
+                    last = self._meta_get_json(
+                        f"ckpt/manifest_step{step}.json")["slot"]
+                except (IOError, FileNotFoundError, KeyError):
+                    last = -1
+                self._slot_counter = (last + 1) % self.slots
+        slot = self._slot_counter
+        if avoid is not None and slot == avoid:
+            slot = (slot + 1) % self.slots
+        self._slot_counter = (slot + 1) % self.slots
+        return slot
+
+    def buddy_of(self, nid: str, ring: Optional[Sequence[str]] = None
+                 ) -> str:
+        ring = list(ring) if ring else self.nodes
+        i = ring.index(nid)
+        return ring[(i + 1) % len(ring)]
+
+    def _live_nodes(self) -> List[str]:
+        """Nodes whose pmem is reachable — a checkpoint after a node
+        loss proceeds on the survivors (elastic save ring)."""
+        live = [n for n in self.nodes
+                if getattr(self.stores[n].pool, "alive", True)]
+        return live or self.nodes
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree, *, base_step: Optional[int] = None,
-             drain: bool = False) -> dict:
+             drain: bool = False,
+             post_commit: Optional[List] = None) -> dict:
         """Write one checkpoint. ``base_step`` enables delta encoding
-        against that step's full checkpoint. Returns the global manifest."""
+        against that step's full checkpoint. Returns the global manifest.
+
+        Post-commit drain/replicate futures are appended to
+        ``post_commit`` when given (the TieredIO engine tracks them per
+        save ticket), else to the internal ``_pending`` list serviced by
+        ``wait_async``."""
         leaves = dict(_flatten(tree))
-        slot = self._slot(step)
+        avoid = None
+        if base_step is not None and self.delta:
+            # never rotate onto the slot holding the delta base
+            avoid = self._meta_get_json(
+                f"ckpt/manifest_step{base_step}.json")["slot"]
+        slot = self._alloc_slot(avoid)
+        ring = self._live_nodes()
         manifest: Dict[str, Any] = {
             "step": step, "slot": slot, "ts": time.time(),
-            "delta_base": base_step, "leaves": {}, "nodes": self.nodes}
+            "delta_base": base_step, "leaves": {}, "nodes": ring}
         per_node: Dict[str, Dict[str, np.ndarray]] = {
-            nid: {} for nid in self.nodes}
+            nid: {} for nid in ring}
         for path, arr in leaves.items():
             arr = np.asarray(arr)
-            shards = plan_shards(path, arr.shape, self.nodes)
+            shards = plan_shards(path, arr.shape, ring)
             manifest["leaves"][path] = {
                 "shape": list(arr.shape), "dtype": str(arr.dtype),
                 "shards": [[s.node, s.start_row, s.n_rows] for s in shards]}
@@ -100,27 +175,27 @@ class DistributedCheckpointer:
                 per_node[s.node][path] = part
 
         obj = f"ckpt/slot{slot}"
-        for nid in self.nodes:
+        for nid in ring:
             payload = per_node[nid]
             if base_step is not None and self.delta:
                 payload = self._encode_delta(nid, payload, base_step)
             self.stores[nid].put(obj, payload, version=0,
                                  meta={"step": step})
         # commit point AFTER all node writes are flushed:
-        self._meta_store().pool.put_json(
-            f"ckpt/manifest_step{step}.json", manifest)
-        self._meta_store().pool.put_json("ckpt/latest.json",
-                                         {"step": step})
+        self._meta_put_json(f"ckpt/manifest_step{step}.json", manifest)
+        self._meta_put_json("ckpt/latest.json", {"step": step})
         # async post-commit work (never blocks the step loop)
+        sink = self._pending if post_commit is None else post_commit
         if self.scheduler is not None:
-            if self.buddy:
-                for nid in self.nodes:
-                    self._pending.append(self.scheduler.replicate(
-                        nid, obj, self.buddy_of(nid)))
+            if self.buddy and len(ring) > 1:
+                for nid in ring:
+                    sink.append(self.scheduler.replicate(
+                        nid, obj, self.buddy_of(nid, ring)))
             if drain and self.external is not None:
-                for nid in self.nodes:
-                    self._pending.append(self.scheduler.drain(
-                        nid, obj, f"ckpt_step{step}_{nid}"))
+                for nid in ring:
+                    sink.append(self.scheduler.drain(
+                        nid, obj, f"ckpt_step{step}_{nid}",
+                        expect_meta={"step": step}))
         return manifest
 
     def wait_async(self) -> None:
@@ -130,9 +205,11 @@ class DistributedCheckpointer:
 
     # ------------------------------------------------------------------
     def _encode_delta(self, nid, payload, base_step):
-        base_man = self._meta_store().pool.get_json(
+        base_man = self._meta_get_json(
             f"ckpt/manifest_step{base_step}.json")
         base_slot = base_man["slot"]
+        self._check_slot_step(self.stores[nid], f"ckpt/slot{base_slot}",
+                              base_step)
         base = self.stores[nid].get(f"ckpt/slot{base_slot}")
         base_leaves = dict(_flatten(base))
         out = {}
@@ -157,13 +234,17 @@ class DistributedCheckpointer:
 
     def _decode_delta(self, nid, payload, base_step, manifest,
                       via_replica: bool = False):
-        base_man = self._meta_store().pool.get_json(
+        base_man = self._meta_get_json(
             f"ckpt/manifest_step{base_step}.json")
         base_name = f"ckpt/slot{base_man['slot']}"
         store = self.stores[nid]
         if via_replica:
-            store = self.stores[self.buddy_of(nid)]
+            # replicas were placed on the buddy within the ring the BASE
+            # manifest was saved under, not today's full node list
+            base_ring = base_man.get("nodes") or self.nodes
+            store = self.stores[self.buddy_of(nid, base_ring)]
             base_name = f"replica/{nid}/{base_name}"
+        self._check_slot_step(store, base_name, base_step)
         base = store.get(base_name)
         base_leaves = dict(_flatten(base))
         out = {}
@@ -191,9 +272,49 @@ class DistributedCheckpointer:
     # ------------------------------------------------------------------
     def latest_step(self) -> Optional[int]:
         try:
-            return self._meta_store().pool.get_json("ckpt/latest.json")["step"]
-        except FileNotFoundError:
+            return self._meta_get_json("ckpt/latest.json")["step"]
+        except (IOError, FileNotFoundError):
             return None
+
+    def available_steps(self) -> List[int]:
+        """All committed checkpoint steps (manifest present on any
+        reachable node), ascending."""
+        steps = set()
+        prefix, suffix = "ckpt/manifest_step", ".json"
+        for nid in self.nodes:
+            for name in self.stores[nid].pool.list("ckpt/"):
+                if name.startswith(prefix) and name.endswith(suffix):
+                    steps.add(int(name[len(prefix):-len(suffix)]))
+        return sorted(steps)
+
+    def restore_latest_recoverable(self, *, lost_nodes: Sequence[str] = ()):
+        """Walk committed steps newest-first and restore the first one
+        whose shards (or buddy replicas, for ``lost_nodes``) are all
+        readable. A node can die between a checkpoint's commit and its
+        replication finishing; that checkpoint is then unrecoverable and
+        recovery must fall back to the previous one."""
+        last_err: Optional[Exception] = None
+        for step in reversed(self.available_steps()):
+            try:
+                return self.restore(step, lost_nodes=lost_nodes)
+            except (IOError, FileNotFoundError, KeyError) as e:
+                last_err = e
+        raise IOError(
+            f"no recoverable checkpoint with lost_nodes={list(lost_nodes)}"
+        ) from last_err
+
+    @staticmethod
+    def _check_slot_step(store: PMemObjectStore, name: str,
+                         step: int) -> None:
+        """Slots are shadow-rotated, so an old manifest can point at a
+        slot that a NEWER checkpoint has since overwritten. The per-node
+        object records the step it was written for; a mismatch must fail
+        the restore (restore_latest_recoverable then walks further back)
+        rather than silently mixing steps."""
+        got = store.manifest(name).get("meta", {}).get("step")
+        if got != step:
+            raise IOError(
+                f"{name} holds step {got}, wanted {step} (slot reused)")
 
     def restore(self, step: Optional[int] = None, *,
                 lost_nodes: Sequence[str] = (),
@@ -202,21 +323,31 @@ class DistributedCheckpointer:
         replicas) and arbitrary re-sharding (byte-range reads)."""
         if step is None:
             step = self.latest_step()
-        manifest = self._meta_store().pool.get_json(
+        manifest = self._meta_get_json(
             f"ckpt/manifest_step{step}.json")
         slot = manifest["slot"]
         obj = f"ckpt/slot{slot}"
+        ring = manifest.get("nodes") or self.nodes
         cache: Dict[str, Dict[str, np.ndarray]] = {}
 
         def node_payload(nid: str) -> Dict[str, np.ndarray]:
             if nid not in cache:
                 src, name = nid, obj
                 if nid in lost_nodes:
-                    src = self.buddy_of(nid)
+                    src = self.buddy_of(nid, ring)
                     name = f"replica/{nid}/{obj}"
                     if not self.stores[src].exists(name):
                         raise IOError(f"no replica of {nid} on {src}")
-                payload = dict(_flatten(self.stores[src].get(name)))
+                # CRC-verified read + step check against the SAME object
+                # manifest: torn or reused-slot data fails here rather
+                # than reassembling a mixed-step tree
+                tree_part, obj_man = self.stores[src].get_with_manifest(
+                    name)
+                got = obj_man.get("meta", {}).get("step")
+                if got != step:
+                    raise IOError(f"{name} holds step {got}, wanted "
+                                  f"{step} (slot reused)")
+                payload = dict(_flatten(tree_part))
                 if manifest.get("delta_base") is not None and self.delta:
                     payload = self._decode_delta(
                         nid, payload, manifest["delta_base"], manifest,
@@ -244,7 +375,7 @@ class DistributedCheckpointer:
                       n_rows: int) -> np.ndarray:
         """Elastic restore primitive: read an arbitrary row range of one
         leaf straight from the owning nodes' pmem (byte-granular)."""
-        manifest = self._meta_store().pool.get_json(
+        manifest = self._meta_get_json(
             f"ckpt/manifest_step{step}.json")
         ent = manifest["leaves"][path]
         slot = manifest["slot"]
@@ -255,6 +386,8 @@ class DistributedCheckpointer:
             lo, hi = max(want_lo, s0), min(want_hi, s0 + nr)
             if lo >= hi:
                 continue
+            self._check_slot_step(self.stores[nid], f"ckpt/slot{slot}",
+                                  step)
             piece = self.stores[nid].read_leaf_slice(
                 f"ckpt/slot{slot}", path, lo - s0, hi - lo)
             pieces.append(piece)

@@ -15,6 +15,8 @@ from repro.core.data_scheduler import DataScheduler, ExternalStore
 from repro.core.object_store import DistributedStore, PMemObjectStore
 from repro.core.pmem import PMemPool
 from repro.core.resilience import FailureRecovery, Heartbeat
+from repro.core.tiered_io import TieredIO
+from repro.core.tiering import DLMCache
 from repro.core.workflow import WorkflowScheduler
 
 
@@ -22,7 +24,8 @@ class SimCluster:
     def __init__(self, root: Path, n_nodes: int = 4,
                  pmem_capacity: int = 1 << 32,
                  external_bandwidth: Optional[float] = None,
-                 buddy: bool = True, delta: bool = False):
+                 buddy: bool = True, delta: bool = False,
+                 dlm_capacity: int = 1 << 28):
         self.root = Path(root)
         self.node_ids = [f"node{i}" for i in range(n_nodes)]
         self.pools: Dict[str, PMemPool] = {
@@ -39,15 +42,29 @@ class SimCluster:
             self.stores, self.scheduler, self.external, buddy=buddy,
             delta=delta)
         self.heartbeat = Heartbeat(self.stores)
-        self.recovery = FailureRecovery(self.checkpointer, self.heartbeat)
+        # the unified async I/O engine (checkpoint + KV tiering + staging)
+        self.dlm = DLMCache(self.stores[self.node_ids[0]],
+                            capacity_bytes=dlm_capacity)
+        self.tiered = TieredIO(self.checkpointer, self.scheduler, self.dlm)
+        self.recovery = FailureRecovery(self.checkpointer, self.heartbeat,
+                                        tiered=self.tiered)
         self.workflows = WorkflowScheduler(self.stores, self.scheduler,
                                            self.external)
 
     def kill_node(self, nid: str) -> None:
         """Simulate a node failure: its pmem becomes unreachable."""
         import shutil
-        shutil.rmtree(self.pools[nid].root)
+        import time
+        pool = self.pools[nid]
+        pool.fail()  # in-flight async writers now fail fast
+        # an async writer may still be mid-create; retry until clean
+        for _ in range(50):
+            shutil.rmtree(pool.root, ignore_errors=True)
+            if not pool.root.exists():
+                break
+            time.sleep(0.02)
         # monitor sees it dead because heartbeats stop / are gone
 
     def shutdown(self) -> None:
+        self.tiered.shutdown()
         self.scheduler.shutdown()

@@ -58,6 +58,12 @@ class ExternalStore:
         return (self.root / (name.replace("/", "_") + ".pkl")).exists()
 
 
+class SupersededError(IOError):
+    """A queued transfer found its source already overwritten by a newer
+    version (e.g. checkpoint slot reuse outpacing a drain). Benign: the
+    newer object's own transfer covers it. Collected, never fatal."""
+
+
 @dataclass(order=True)
 class _Task:
     priority: int
@@ -134,11 +140,31 @@ class DataScheduler:
 
     def drain(self, nid: str, obj_name: str, external_name: str,
               version: int = 0, priority: int = 1,
-              delete_after: bool = False) -> Future:
+              delete_after: bool = False,
+              expect_meta: Optional[dict] = None) -> Future:
         def go():
-            tree = self.stores[nid].get(obj_name, version)
+            # one manifest snapshot + CRC so a concurrent overwrite of
+            # the source (checkpoint slot reuse) raises instead of
+            # draining torn bytes; ``expect_meta`` additionally pins the
+            # object identity (e.g. checkpoint step) the caller intended.
+            try:
+                tree, man = self.stores[nid].get_with_manifest(
+                    obj_name, version)
+            except (IOError, ValueError) as e:
+                # torn/resized mid-overwrite or already deleted — a
+                # short region read surfaces as ValueError on reshape
+                raise SupersededError(
+                    f"drain {obj_name}: source rewritten before drain "
+                    f"ran ({e})") from e
+            if expect_meta:
+                got = man.get("meta", {})
+                stale = {k: got.get(k) for k in expect_meta
+                         if got.get(k) != expect_meta[k]}
+                if stale:
+                    raise SupersededError(
+                        f"drain {obj_name}: source changed before drain "
+                        f"ran (wanted {expect_meta}, found {stale})")
             self.external.put(external_name, tree)
-            man = self.stores[nid].manifest(obj_name, version)
             self.stats[nid]["drained"] += man["nbytes"]
             if delete_after:
                 self.stores[nid].delete(obj_name, version)
@@ -154,9 +180,22 @@ class DataScheduler:
         name = dst_name or f"replica/{src}/{obj_name}"
 
         def go():
-            tree = self.stores[src].get(obj_name, version)
+            # data + meta from ONE CRC-verified manifest snapshot: a
+            # concurrent overwrite of the source (checkpoint slot reuse
+            # racing this queued task) raises here instead of storing a
+            # replica whose step tag disagrees with its bytes. The
+            # overwriting save queues its own replicate, so dropping
+            # this one is benign (SupersededError, filtered at join).
+            try:
+                tree, src_man = self.stores[src].get_with_manifest(
+                    obj_name, version)
+            except (IOError, ValueError) as e:
+                raise SupersededError(
+                    f"replicate {obj_name}: source rewritten before "
+                    f"replication ran ({e})") from e
             man = self.stores[dst].put(name, tree, version,
-                                       meta={"replica_of": src})
+                                       meta={**src_man.get("meta", {}),
+                                             "replica_of": src})
             self.stats[src]["replicated"] += man["nbytes"]
             return man
         return self._submit(src, go, priority)

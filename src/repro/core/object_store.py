@@ -83,6 +83,16 @@ class PMemObjectStore:
         return self.pool.exists(f"objects/{name}@v{version}.manifest")
 
     def get(self, name: str, version: int = 0, verify: bool = False):
+        tree, _ = self.get_with_manifest(name, version, verify=verify)
+        return tree
+
+    def get_with_manifest(self, name: str, version: int = 0,
+                          verify: bool = True):
+        """Read (tree, manifest) against ONE manifest snapshot, CRC-
+        verifying every leaf against it. A concurrent overwrite (e.g.
+        checkpoint slot reuse racing a queued replicate) produces bytes
+        that do not match this manifest's CRCs and raises IOError instead
+        of returning torn or wrongly-tagged data."""
         man = self.manifest(name, version)
         region = self.pool.open(f"objects/{name}@v{version}.data")
         leaves = {}
@@ -96,7 +106,7 @@ class PMemObjectStore:
                 if crc != ent["crc"]:
                     raise IOError(f"crc mismatch for {name}:{path}")
             leaves[path] = arr
-        return _unflatten(leaves)
+        return _unflatten(leaves), man
 
     def read_leaf_slice(self, name: str, leaf: str, start_row: int,
                         n_rows: int, version: int = 0) -> np.ndarray:

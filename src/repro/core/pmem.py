@@ -66,6 +66,22 @@ class PMemPool:
         self.root.mkdir(parents=True, exist_ok=True)
         self._open: Dict[str, PMemRegion] = {}
         self._lock = threading.RLock()
+        self._dead = False
+
+    @property
+    def alive(self) -> bool:
+        return not self._dead
+
+    def fail(self) -> None:
+        """Simulate the node's B-APM becoming unreachable (node death).
+        Subsequent accesses raise IOError instead of racing with cleanup;
+        in-flight async writers fail fast rather than resurrecting
+        directories mid-teardown."""
+        self._dead = True
+
+    def _check_alive(self) -> None:
+        if self._dead:
+            raise IOError(f"pmem pool {self.node_id} unreachable")
 
     def _path(self, name: str) -> Path:
         p = (self.root / name).resolve()
@@ -74,6 +90,7 @@ class PMemPool:
 
     def create(self, name: str, nbytes: int) -> PMemRegion:
         with self._lock:
+            self._check_alive()
             if self.used_bytes() + nbytes > self.capacity_bytes:
                 raise MemoryError(
                     f"pmem pool {self.node_id} over capacity: "
@@ -86,6 +103,7 @@ class PMemPool:
 
     def open(self, name: str) -> PMemRegion:
         with self._lock:
+            self._check_alive()
             if name in self._open:
                 return self._open[name]
             path = self._path(name)
@@ -94,7 +112,7 @@ class PMemPool:
             return region
 
     def exists(self, name: str) -> bool:
-        return self._path(name).exists()
+        return not self._dead and self._path(name).exists()
 
     def delete(self, name: str) -> None:
         with self._lock:
@@ -106,6 +124,8 @@ class PMemPool:
                 p.unlink()
 
     def list(self, prefix: str = "") -> Iterator[str]:
+        if self._dead:
+            return
         base = self.root
         for p in sorted(base.rglob("*")):
             if p.is_file():
@@ -114,12 +134,19 @@ class PMemPool:
                     yield rel
 
     def used_bytes(self) -> int:
-        return sum(p.stat().st_size for p in self.root.rglob("*")
-                   if p.is_file())
+        total = 0
+        for p in self.root.rglob("*"):
+            try:
+                if p.is_file():
+                    total += p.stat().st_size
+            except OSError:
+                continue  # e.g. a .tmp committed (renamed) mid-scan
+        return total
 
     # ---- small atomic metadata (manifests) ----
     def put_json(self, name: str, obj) -> None:
         """Crash-consistent metadata commit: tmp write + fsync + rename."""
+        self._check_alive()
         path = self._path(name)
         path.parent.mkdir(parents=True, exist_ok=True)
         tmp = path.with_suffix(path.suffix + ".tmp")
@@ -130,5 +157,6 @@ class PMemPool:
         os.replace(tmp, path)  # atomic on POSIX
 
     def get_json(self, name: str):
+        self._check_alive()
         with open(self._path(name)) as f:
             return json.load(f)

@@ -26,13 +26,16 @@ class Heartbeat:
         self.stores = stores
 
     def beat(self, nid: str, step: int) -> None:
-        self.stores[nid].pool.put_json(
-            "hb/heartbeat.json", {"ts": time.time(), "step": step})
+        try:
+            self.stores[nid].pool.put_json(
+                "hb/heartbeat.json", {"ts": time.time(), "step": step})
+        except IOError:
+            pass  # unreachable pmem == the node is dead; it stops beating
 
     def read(self, nid: str) -> Optional[dict]:
         try:
             return self.stores[nid].pool.get_json("hb/heartbeat.json")
-        except FileNotFoundError:
+        except (FileNotFoundError, IOError):
             return None
 
     def dead_nodes(self, timeout_s: float, now: Optional[float] = None
@@ -71,10 +74,23 @@ class StragglerDetector:
 
 class FailureRecovery:
     def __init__(self, ckpt: DistributedCheckpointer, hb: Heartbeat,
-                 timeout_s: float = 10.0):
+                 timeout_s: float = 10.0, tiered=None):
         self.ckpt = ckpt
         self.hb = hb
         self.timeout_s = timeout_s
+        self.tiered = tiered          # Optional[TieredIO]
+        self.inflight_errors: List[Exception] = []
+
+    def quiesce_inflight(self) -> List[Exception]:
+        """Consume every in-flight TieredIO future before reading the
+        checkpoint index: a save that committed must become visible, and
+        a drain/replicate that died with the node must be swallowed (its
+        error is kept for diagnostics, never raised)."""
+        if self.tiered is None:
+            return []
+        errors = self.tiered.quiesce()
+        self.inflight_errors.extend(errors)
+        return errors
 
     def check_and_recover(self, now: Optional[float] = None):
         """Returns None if healthy, else (restored_tree, manifest,
@@ -83,8 +99,9 @@ class FailureRecovery:
         dead = self.hb.dead_nodes(self.timeout_s, now)
         if not dead:
             return None
-        step = self.ckpt.latest_step()
-        if step is None:
+        self.quiesce_inflight()
+        if self.ckpt.latest_step() is None:
             raise RuntimeError(f"nodes {dead} dead and no checkpoint exists")
-        tree, manifest = self.ckpt.restore(step, lost_nodes=dead)
+        tree, manifest = self.ckpt.restore_latest_recoverable(
+            lost_nodes=dead)
         return tree, manifest, dead

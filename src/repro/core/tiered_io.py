@@ -1,0 +1,356 @@
+"""TieredIO: one nonblocking engine over the B-APM memory hierarchy.
+
+The paper's architecture (Fig. 4 data scheduler, Fig. 8 burst-buffer
+staging) hinges on a single property: the application never blocks on a
+tier slower than node-local B-APM. The repo grew three separate paths
+with that goal — the shadow-slot checkpoint writer (core/checkpoint.py),
+the drain/replicate/stage-in scheduler (core/data_scheduler.py) and the
+SLM/DLM placement policies (core/tiering.py). ``TieredIO`` unifies them
+behind one engine; the existing modules remain as thin policy layers.
+
+API surface:
+
+  save_async(step, tree)  -> SaveTicket (a Future): checkpoint writes
+        happen on a dedicated I/O thread, double-buffered across the
+        checkpointer's pmem slots, so the step-N write overlaps step-N+1
+        compute. Post-commit drain/replicate futures ride on the ticket.
+  offload(name, tree)     -> Future: generic object persist (serve KV /
+        session state) through the DLM write-back cache.
+  fetch(name) / prefetch(names): demand vs. anticipatory reads through
+        the DLM cache — prefetch warms DRAM from pmem in the background
+        and feeds the serve engine's cold KV pages.
+  stage_in(names)         -> burst-buffer pre-load, external -> pmem,
+        delegated to the data scheduler (hit-rate accounted).
+  evict_cold(max_idle_s)  -> spill idle DRAM entries back to pmem.
+  quiesce()               -> join every in-flight future, collecting
+        (not raising) errors — the recovery path consumes in-flight
+        work safely even when a buddy node died mid-replicate.
+
+Backpressure: at most ``checkpointer.slots`` save tickets may be in
+flight; submitting another blocks until the oldest commits. Combined
+with the FIFO I/O thread this guarantees a slot is never overwritten
+while a write to it is still in flight.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+from repro.core.checkpoint import DistributedCheckpointer
+from repro.core.data_scheduler import DataScheduler, SupersededError
+from repro.core.tiering import DLMCache
+
+
+class SaveTicket:
+    """Handle for one asynchronous checkpoint save.
+
+    ``result()`` blocks until the node-local pmem commit (the manifest
+    rename) finishes and returns the global manifest. ``post_commit``
+    holds the background drain/replicate futures, which may complete —
+    or fail, e.g. when a buddy node dies — long after the commit.
+    """
+
+    def __init__(self, step: int, slot: Optional[int] = None):
+        self.step = step
+        self.slot = slot  # filled in once the writer allocates it
+        self.future: Future = Future()
+        self.post_commit: List[Future] = []
+
+    def result(self, timeout: Optional[float] = None) -> dict:
+        return self.future.result(timeout)
+
+    def done(self) -> bool:
+        return self.future.done()
+
+    def exception(self, timeout: Optional[float] = None):
+        return self.future.exception(timeout)
+
+    def wait_post_commit(self, timeout: Optional[float] = None
+                         ) -> List[Exception]:
+        """Join drain/replicate; returns their errors instead of raising
+        (a dead replica target must not poison an otherwise-good save)."""
+        errors: List[Exception] = []
+        for f in self.post_commit:
+            try:
+                f.result(timeout)
+            except Exception as e:  # noqa: BLE001 — collected for caller
+                errors.append(e)
+        return errors
+
+
+class TieredIO:
+    """Async engine over checkpointer + scheduler + DLM cache."""
+
+    def __init__(self, checkpointer: Optional[DistributedCheckpointer] = None,
+                 scheduler: Optional[DataScheduler] = None,
+                 cache: Optional[DLMCache] = None,
+                 max_inflight_saves: Optional[int] = None):
+        self.checkpointer = checkpointer
+        self.scheduler = scheduler
+        self.cache = cache
+        self.max_inflight = max_inflight_saves or (
+            checkpointer.slots if checkpointer is not None else 2)
+        self.errors: List[Exception] = []       # post-commit failures
+        self.save_errors: List[Exception] = []  # checkpoint COMMIT failures
+        self.stats = {"saves": 0, "offloads": 0, "prefetch_hits": 0,
+                      "prefetch_loads": 0, "stage_in_hits": 0,
+                      "stage_in_loads": 0}
+        self._tickets: "collections.deque[SaveTicket]" = collections.deque()
+        self._retired: List[SaveTicket] = []  # committed, drains may run
+        self._futures: List[Future] = []   # offload/prefetch futures
+        self._lock = threading.Lock()
+        # one FIFO writer thread: serialises pmem writes (slot safety),
+        # overlaps them with the caller's compute. Reads (prefetch
+        # warms) go through their own pool so a large warm-up batch
+        # never delays the next checkpoint commit.
+        self._io = ThreadPoolExecutor(max_workers=1,
+                                      thread_name_prefix="tiered-io-wr")
+        self._read = ThreadPoolExecutor(max_workers=2,
+                                        thread_name_prefix="tiered-io-rd")
+
+    def _submit(self, fn) -> Future:
+        return self._io.submit(fn)  # raises RuntimeError after shutdown
+
+    # ---- checkpoint channel ------------------------------------------
+    def save_async(self, step: int, tree, *,
+                   base_step: Optional[int] = None,
+                   drain: bool = False) -> SaveTicket:
+        """Nonblocking checkpoint: returns immediately (modulo slot
+        backpressure); the write overlaps the caller's next step."""
+        assert self.checkpointer is not None, "no checkpointer attached"
+        ckpt = self.checkpointer
+        ticket = SaveTicket(step)
+        retiring: List[SaveTicket] = []
+        with self._lock:
+            self._prune_done_locked()
+            # double-buffer backpressure: never exceed the slot count.
+            # The FIFO writer thread already serialises the pmem writes;
+            # this only bounds how far the caller can run ahead. Only
+            # the node-local COMMIT of the retiring ticket gates it —
+            # its drain/replicate futures keep overlapping.
+            while len(self._tickets) >= self.max_inflight:
+                retiring.append(self._tickets.popleft())
+            self._tickets.append(ticket)
+        for old in retiring:  # wait OUTSIDE the lock: offload/prefetch
+            try:              # submissions must not stall behind a write
+                old.result()
+            except Exception as e:  # noqa: BLE001 — surfaced by
+                self.save_errors.append(e)  # raise_if_failed / quiesce
+            with self._lock:
+                self._retired.append(old)
+
+        def _save():
+            man = ckpt.save(step, tree, base_step=base_step, drain=drain,
+                            post_commit=ticket.post_commit)
+            ticket.slot = man["slot"]
+            self.stats["saves"] += 1
+            return man
+
+        # chain into the ticket's pre-existing future: the ticket is
+        # already visible (in _tickets) to concurrent quiesce callers
+        def _chain(f: Future) -> None:
+            e = f.exception()
+            if e is not None:
+                ticket.future.set_exception(e)
+            else:
+                ticket.future.set_result(f.result())
+
+        try:
+            self._submit(_save).add_done_callback(_chain)
+        except RuntimeError:
+            with self._lock:
+                self._tickets.remove(ticket)
+            raise
+        return ticket
+
+    def raise_if_failed(self) -> None:
+        """Raise the first pending checkpoint COMMIT failure. The
+        training loop calls this at every checkpoint boundary so a run
+        doesn't continue for hours believing it is protected while every
+        save fails. Post-commit drain/replicate errors (e.g. a dead
+        buddy) are NOT raised here — they degrade durability, not the
+        node-local checkpoint itself."""
+        with self._lock:
+            for t in list(self._tickets):
+                if t.done() and t.exception() is not None:
+                    self.save_errors.append(t.exception())
+                    self._tickets.remove(t)
+            if self.save_errors:
+                raise self.save_errors[0]
+
+    def _prune_done_locked(self) -> None:
+        """Drop fully-completed retired tickets and offload/prefetch
+        futures so steady-state training/serving doesn't accumulate one
+        record per checkpoint/spill forever. Failures are folded into
+        ``errors`` before the record is dropped."""
+        keep_t = []
+        for t in self._retired:
+            if all(f.done() for f in t.post_commit):
+                for f in t.post_commit:
+                    e = f.exception()
+                    if e is not None:
+                        self.errors.append(e)
+            else:
+                keep_t.append(t)
+        self._retired = keep_t
+        keep_f = []
+        for f in self._futures:
+            if f.done():
+                e = f.exception()
+                if e is not None:
+                    self.errors.append(e)
+            else:
+                keep_f.append(f)
+        self._futures = keep_f
+
+    def _drain_ticket(self, ticket: SaveTicket) -> None:
+        try:
+            ticket.result()
+        except Exception as e:  # noqa: BLE001 — kept for quiesce callers
+            self.save_errors.append(e)
+        self.errors.extend(ticket.wait_post_commit())
+
+    def last_ticket(self) -> Optional[SaveTicket]:
+        with self._lock:
+            return self._tickets[-1] if self._tickets else None
+
+    # ---- object channel (serve KV pages, session state) --------------
+    def offload(self, name: str, tree) -> Future:
+        """Persist an object through the DLM write-back cache (or the
+        checkpointer's meta store when no cache is attached). The future
+        resolves once the object is durable in pmem."""
+
+        def _persist():
+            if self.cache is not None:
+                self.cache.put(name, tree)
+                self.cache.flush(name)  # write back just this object
+            else:
+                assert self.checkpointer is not None
+                self.checkpointer._meta_store().put(f"dlm/{name}", tree)
+            self.stats["offloads"] += 1
+            return name
+
+        fut = self._submit(_persist)
+        with self._lock:
+            self._prune_done_locked()
+            self._futures.append(fut)
+        return fut
+
+    def fetch(self, name: str):
+        """Demand read through the DLM cache (hit/miss accounted), or
+        straight from pmem when no cache is attached — symmetric with
+        ``offload`` so an engine without a cache still round-trips."""
+        if self.cache is not None:
+            return self.cache.get(name)
+        assert self.checkpointer is not None, "no pmem backend attached"
+        return self.checkpointer._meta_store().get(f"dlm/{name}")
+
+    def prefetch(self, names: Iterable[str]) -> Future:
+        """Warm DRAM with ``names`` from pmem in the background. The
+        future resolves to ``{"hits": n_already_resident, "loads":
+        n_pulled_from_pmem, "missing": n_not_in_pmem}``. Advisory: an
+        object absent from pmem is counted, never raised — the demand
+        path is the arbiter of real misses."""
+        assert self.cache is not None, "no DLM cache attached"
+        names = list(names)
+
+        def _warm():
+            hits = loads = missing = 0
+            for n in names:
+                try:
+                    if self.cache.prefetch(n):
+                        hits += 1
+                    else:
+                        loads += 1
+                except (IOError, FileNotFoundError, KeyError):
+                    missing += 1
+            self.stats["prefetch_hits"] += hits
+            self.stats["prefetch_loads"] += loads
+            return {"hits": hits, "loads": loads, "missing": missing}
+
+        fut = self._read.submit(_warm)
+        with self._lock:
+            self._prune_done_locked()
+            self._futures.append(fut)
+        return fut
+
+    def evict_cold(self, max_idle_s: float = 0.0) -> int:
+        """Spill idle DRAM entries back to pmem; returns count evicted."""
+        if self.cache is None:
+            return 0
+        return self.cache.evict_cold(max_idle_s)
+
+    # ---- burst-buffer channel (external -> pmem) ---------------------
+    def stage_in(self, nid: str, names: Sequence[str],
+                 prefix: str = "staged/") -> List[Future]:
+        """Pre-load external objects into node ``nid``'s pmem (Fig. 8
+        steps 1-3). Objects already resident count as stage-in hits."""
+        assert self.scheduler is not None, "no scheduler attached"
+        futs: List[Future] = []
+        for name in names:
+            obj = prefix + name
+            if self.scheduler.stores[nid].exists(obj):
+                self.stats["stage_in_hits"] += 1
+                done: Future = Future()
+                done.set_result(None)
+                futs.append(done)
+                continue
+            self.stats["stage_in_loads"] += 1
+            futs.append(self.scheduler.stage_in(nid, name, obj))
+        with self._lock:
+            self._prune_done_locked()
+            self._futures.extend(futs)
+        return futs
+
+    def stage_in_hit_rate(self) -> float:
+        tot = self.stats["stage_in_hits"] + self.stats["stage_in_loads"]
+        return self.stats["stage_in_hits"] / tot if tot else 0.0
+
+    # ---- lifecycle ---------------------------------------------------
+    def quiesce(self) -> List[Exception]:
+        """Join every in-flight save/offload/prefetch. Errors are
+        collected (and returned), never raised: recovery must be able to
+        consume in-flight futures even when nodes died under them."""
+        while True:
+            with self._lock:
+                if self._tickets:
+                    ticket, fresh = self._tickets.popleft(), True
+                elif self._retired:
+                    ticket, fresh = self._retired.pop(), False
+                else:
+                    break
+            if fresh:
+                self._drain_ticket(ticket)
+            else:  # commit already joined at backpressure time
+                self.errors.extend(ticket.wait_post_commit())
+        while True:
+            with self._lock:
+                if not self._futures:
+                    break
+                fut = self._futures.pop()
+            try:
+                fut.result()
+            except Exception as e:  # noqa: BLE001
+                self.errors.append(e)
+        with self._lock:
+            errors = self.save_errors + self.errors
+            self.save_errors, self.errors = [], []
+        return errors
+
+    def join(self) -> None:
+        """Strict barrier: wait for all in-flight work, raising the first
+        REAL error. A ``SupersededError`` (a drain/replicate outpaced by
+        slot reuse — the newer checkpoint's own transfer covers it) is
+        benign and must not fail an otherwise-clean run. Use at clean
+        shutdown; recovery paths use ``quiesce``."""
+        errors = [e for e in self.quiesce()
+                  if not isinstance(e, SupersededError)]
+        if errors:
+            raise errors[0]
+
+    def shutdown(self) -> None:
+        self.quiesce()
+        self._io.shutdown(wait=True)
+        self._read.shutdown(wait=True)

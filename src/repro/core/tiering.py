@@ -61,22 +61,32 @@ class DLMCache:
             collections.OrderedDict()
         self._sizes: Dict[str, int] = {}
         self._dirty: Dict[str, bool] = {}
+        self._last_used: Dict[str, float] = {}
+        self._gen: Dict[str, int] = {}  # bumped on put/evict (TOCTOU)
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.prefetches = 0
+        self.prefetch_hits = 0
 
     def _bytes(self, tree) -> int:
         return sum(np.asarray(a).nbytes for _, a in _flatten(tree))
 
+    def _evict_one(self, name: str) -> None:
+        """Drop ``name`` from DRAM (write-back if dirty). Lock held."""
+        tree = self._cache.pop(name)
+        if self._dirty.pop(name, False):
+            self.store.put(f"dlm/{name}", tree)  # write-back
+        self._sizes.pop(name, None)
+        self._last_used.pop(name, None)
+        self._gen[name] = self._gen.get(name, 0) + 1
+        self.evictions += 1
+
     def _evict_until_fits(self, incoming: int) -> None:
         while self._cache and \
                 sum(self._sizes.values()) + incoming > self.capacity:
-            name, tree = self._cache.popitem(last=False)
-            if self._dirty.pop(name, False):
-                self.store.put(f"dlm/{name}", tree)  # write-back
-            self._sizes.pop(name)
-            self.evictions += 1
+            self._evict_one(next(iter(self._cache)))  # LRU head
 
     def put(self, name: str, tree) -> None:
         with self._lock:
@@ -86,12 +96,15 @@ class DLMCache:
             self._cache.move_to_end(name)
             self._sizes[name] = nb
             self._dirty[name] = True
+            self._last_used[name] = time.time()
+            self._gen[name] = self._gen.get(name, 0) + 1
 
     def get(self, name: str):
         with self._lock:
             if name in self._cache:
                 self.hits += 1
                 self._cache.move_to_end(name)
+                self._last_used[name] = time.time()
                 return self._cache[name]
             self.misses += 1
             tree = self.store.get(f"dlm/{name}")
@@ -100,14 +113,65 @@ class DLMCache:
             self._cache[name] = tree
             self._sizes[name] = nb
             self._dirty[name] = False
+            self._last_used[name] = time.time()
             return tree
 
-    def flush(self) -> None:
+    def contains(self, name: str) -> bool:
         with self._lock:
-            for name, tree in self._cache.items():
-                if self._dirty.get(name):
-                    self.store.put(f"dlm/{name}", tree)
-                    self._dirty[name] = False
+            return name in self._cache
+
+    def prefetch(self, name: str) -> bool:
+        """Warm ``name`` into DRAM without counting toward hit/miss demand
+        stats. Returns True when the entry was already resident (a
+        prefetch hit). Used by TieredIO to hide pmem->DRAM latency.
+
+        The pmem read happens OUTSIDE the lock — a background warm must
+        not stall concurrent demand gets on the serving hot path."""
+        with self._lock:
+            self.prefetches += 1
+            if name in self._cache:
+                self.prefetch_hits += 1
+                self._cache.move_to_end(name)
+                self._last_used[name] = time.time()  # warm != cold
+                return True
+            gen = self._gen.get(name, 0)
+        tree = self.store.get(f"dlm/{name}")
+        with self._lock:
+            # insert only if nobody touched the entry while we read pmem
+            # (a concurrent put+evict would make our snapshot stale)
+            if name not in self._cache and \
+                    self._gen.get(name, 0) == gen:
+                nb = self._bytes(tree)
+                self._evict_until_fits(nb)
+                self._cache[name] = tree
+                self._sizes[name] = nb
+                self._dirty[name] = False
+                self._last_used[name] = time.time()
+            return False
+
+    def evict_cold(self, max_idle_s: float = 0.0,
+                   now: Optional[float] = None) -> int:
+        """Spill entries idle for > ``max_idle_s`` back to pmem and drop
+        them from DRAM (write-back for dirty ones). Returns the number of
+        entries evicted. ``max_idle_s=0`` evicts everything."""
+        now = now if now is not None else time.time()
+        with self._lock:
+            cold = [n for n, ts in self._last_used.items()
+                    if now - ts >= max_idle_s]
+            for name in cold:
+                self._evict_one(name)
+            return len(cold)
+
+    def flush(self, name: Optional[str] = None) -> None:
+        """Write back dirty entries — all of them, or just ``name`` (so a
+        single-object persist doesn't rewrite the whole cache while
+        holding the lock)."""
+        with self._lock:
+            targets = [name] if name is not None else list(self._cache)
+            for n in targets:
+                if self._dirty.get(n) and n in self._cache:
+                    self.store.put(f"dlm/{n}", self._cache[n])
+                    self._dirty[n] = False
 
 
 class TieredKVCache:
@@ -118,13 +182,25 @@ class TieredKVCache:
     def __init__(self, store: PMemObjectStore, dram_capacity_bytes: int):
         self.cache = DLMCache(store, dram_capacity_bytes)
 
+    @staticmethod
+    def page_name(seq_id: int, layer: int, page: int) -> str:
+        return f"kv/{seq_id}/{layer}/{page}"
+
     def put_page(self, seq_id: int, layer: int, page: int, kv) -> None:
-        self.cache.put(f"kv/{seq_id}/{layer}/{page}", kv)
+        self.cache.put(self.page_name(seq_id, layer, page), kv)
 
     def get_page(self, seq_id: int, layer: int, page: int):
-        return self.cache.get(f"kv/{seq_id}/{layer}/{page}")
+        return self.cache.get(self.page_name(seq_id, layer, page))
+
+    def prefetch_page(self, seq_id: int, layer: int, page: int) -> bool:
+        return self.cache.prefetch(self.page_name(seq_id, layer, page))
+
+    def evict_cold(self, max_idle_s: float = 0.0) -> int:
+        return self.cache.evict_cold(max_idle_s)
 
     @property
     def stats(self):
         return {"hits": self.cache.hits, "misses": self.cache.misses,
-                "evictions": self.cache.evictions}
+                "evictions": self.cache.evictions,
+                "prefetches": self.cache.prefetches,
+                "prefetch_hits": self.cache.prefetch_hits}

@@ -75,7 +75,17 @@ class StagedDataset:
                     cfg.vocab_size))
 
     def _node_for(self, i: int) -> str:
-        return self.cluster.node_ids[i % len(self.cluster.node_ids)]
+        # stable home node per shard; only shards whose home died are
+        # re-targeted onto survivors — a node loss must not remap (and
+        # force re-staging of) every shard already resident elsewhere
+        ids = self.cluster.node_ids
+        nid = ids[i % len(ids)]
+        if getattr(self.cluster.pools[nid], "alive", True):
+            return nid
+        live = [n for n in ids
+                if getattr(self.cluster.pools[n], "alive", True)]
+        live = live or ids
+        return live[i % len(live)]
 
     def _ensure_staged(self, i: int) -> None:
         i = i % self.n_shards
@@ -93,7 +103,13 @@ class StagedDataset:
                 self._ensure_staged(i + ahead)
             fut = self._futures.pop(i, None)
             if fut is not None:
-                fut.result()  # only blocks if prefetch fell behind
-            shard = self.cluster.stores[self._node_for(i)].get(
-                f"data_shard_{i}")
+                try:
+                    fut.result()  # only blocks if prefetch fell behind
+                except IOError:
+                    pass  # target node died mid-stage; re-stage below
+            name = f"data_shard_{i}"
+            nid = self._node_for(i)
+            if not self.cluster.stores[nid].exists(name):
+                self.cluster.scheduler.stage_in(nid, name, name).result()
+            shard = self.cluster.stores[nid].get(name)
             yield make_batch(shard, self.cfg, self.shape, self.rng)

@@ -1,0 +1,49 @@
+"""JAX version-compat shims for the distributed layer.
+
+The repo targets the modern spelling (``jax.shard_map`` with a
+``check_vma`` kwarg) but must also run on JAX 0.4.x, where shard_map
+lives in ``jax.experimental.shard_map`` and the replication-check kwarg
+is named ``check_rep``. This module resolves both at import time so call
+sites can use one spelling everywhere.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # JAX >= 0.5: top-level export
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # JAX 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_HAS_CHECK_VMA = "check_vma" in _PARAMS
+_HAS_CHECK_REP = "check_rep" in _PARAMS
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """``jax.shard_map`` across JAX versions.
+
+    ``check_vma`` maps onto the old ``check_rep`` kwarg when running on
+    0.4.x; both mean "verify per-device replication of outputs".
+    """
+    if check_vma is not None:
+        if _HAS_CHECK_VMA:
+            kwargs["check_vma"] = check_vma
+        elif _HAS_CHECK_REP:
+            kwargs["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def axis_size(axis_name):
+    """Static size of a mapped mesh axis, inside shard_map bodies.
+
+    ``jax.lax.axis_size`` only exists on newer JAX; ``psum(1, axis)`` is
+    the portable spelling and constant-folds to a static int at trace
+    time on 0.4.x.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -15,7 +15,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.distributed.compat import axis_size, shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
@@ -67,7 +67,7 @@ def make_flash_decode(mesh: Mesh):
             sc_loc = kc.shape[1]
             if seq_ok:
                 midx = jax.lax.axis_index("model")
-                nshard = jax.lax.axis_size("model")
+                nshard = axis_size("model")
             else:
                 midx, nshard = 0, 1
             if write:

@@ -25,7 +25,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.distributed.compat import axis_size, shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
@@ -290,7 +290,7 @@ def make_moe_replicated(mesh: Mesh, expert_2d: bool = False):
                 idx = jnp.int32(0)
                 stride = b_tot
                 for ax in baxes:
-                    stride = stride // jax.lax.axis_size(ax)
+                    stride = stride // axis_size(ax)
                     idx = idx + jax.lax.axis_index(ax) * stride
                 y_tok = jax.lax.dynamic_slice_in_dim(
                     y_tok.reshape(b_tot, s, d), idx, b_loc, axis=0)

@@ -33,7 +33,8 @@ def main(argv=None):
     params, _ = tfm.init_params(jax.random.PRNGKey(0), cfg, rt)
     root = Path(args.root or tempfile.mkdtemp())
     cluster = SimCluster(root, n_nodes=1)
-    eng = ServeEngine(cfg, rt, params, store=cluster.stores["node0"])
+    eng = ServeEngine(cfg, rt, params, store=cluster.stores["node0"],
+                      tiered=cluster.tiered)
 
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
@@ -48,8 +49,10 @@ def main(argv=None):
     t0 = time.time()
     out = eng.decode(first, args.gen)
     t_decode = time.time() - t0
-    # demonstrate pmem persistence of serving state
+    # demonstrate pmem persistence of serving state: spill through the
+    # TieredIO write-back cache, warm it back via prefetch, resume.
     eng.spill("session0")
+    eng.prefetch_sessions(["session0"]).result()
     eng.resume("session0")
     more = eng.decode(out[:, -1], 4)
     print(f"arch={cfg.name} batch={args.batch} prefill={t_prefill:.2f}s "

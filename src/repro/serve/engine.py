@@ -2,9 +2,17 @@
 
 The engine drives models/transformer's prefill/decode with jitted steps.
 Idle or preempted sequences' KV caches can be *spilled* to the node's
-B-APM (object store) and resumed later — long-context serving state
-outlives DRAM pressure and even process restarts, which is precisely the
-paper's persistent-memory serving story.
+B-APM and resumed later — long-context serving state outlives DRAM
+pressure and even process restarts, which is precisely the paper's
+persistent-memory serving story.
+
+Two spill paths:
+  * legacy direct-store (``store=``): synchronous object-store put/get;
+  * TieredIO (``tiered=``): spill goes through the DLM write-back cache
+    on the engine's I/O thread (nonblocking), and ``prefetch_sessions``
+    warms cold session/KV state from pmem into DRAM *before* the next
+    request needs it — the scheduler-driven cold-page prefetch of the
+    paper's Fig. 8.
 """
 from __future__ import annotations
 
@@ -17,16 +25,19 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.object_store import PMemObjectStore
+from repro.core.tiered_io import TieredIO
 from repro.models import transformer as tfm
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, rt: tfm.ModelRuntime, params,
-                 store: Optional[PMemObjectStore] = None):
+                 store: Optional[PMemObjectStore] = None,
+                 tiered: Optional[TieredIO] = None):
         self.cfg = cfg
         self.rt = rt
         self.params = params
         self.store = store
+        self.tiered = tiered
         self.cache = None
         self.pos = 0
         self._decode = jax.jit(
@@ -55,15 +66,40 @@ class ServeEngine:
         return np.stack(out, axis=1)
 
     # ---- pmem spill (SLM): persist serving state, restore later ----
-    def spill(self, name: str) -> None:
-        assert self.store is not None, "no pmem store attached"
+    def spill(self, name: str, wait: bool = True):
+        """Persist the session's KV/cursor to pmem and free DRAM. With a
+        TieredIO engine attached the write happens off-thread; pass
+        ``wait=False`` to get the future instead of blocking."""
+        assert self.tiered is not None or self.store is not None, \
+            "no pmem backend attached"  # check BEFORE dropping the KV
         host = jax.tree.map(np.asarray, self.cache)
-        self.store.put(f"serve/{name}", {"cache": host,
-                                         "pos": np.int32(self.pos)})
+        obj = {"cache": host, "pos": np.int32(self.pos)}
         self.cache = None  # DRAM freed
+        if self.tiered is not None:
+            fut = self.tiered.offload(f"serve/{name}", obj)
+            if wait:
+                fut.result()
+                return None
+            return fut
+        self.store.put(f"serve/{name}", obj)
+        return None
 
     def resume(self, name: str) -> None:
-        assert self.store is not None
-        obj = self.store.get(f"serve/{name}")
+        if self.tiered is not None:
+            obj = self.tiered.fetch(f"serve/{name}")
+        else:
+            assert self.store is not None
+            obj = self.store.get(f"serve/{name}")
         self.cache = jax.tree.map(jnp.asarray, obj["cache"])
         self.pos = int(obj["pos"])
+
+    def prefetch_sessions(self, names: List[str]):
+        """Warm cold session state pmem -> DRAM ahead of resume (Fig. 8
+        prefetch). Returns the TieredIO future (hit/load counts)."""
+        assert self.tiered is not None, "prefetch needs a TieredIO engine"
+        return self.tiered.prefetch([f"serve/{n}" for n in names])
+
+    def evict_cold_sessions(self, max_idle_s: float = 0.0) -> int:
+        """Spill idle cached sessions back to pmem (DRAM pressure valve)."""
+        assert self.tiered is not None, "eviction needs a TieredIO engine"
+        return self.tiered.evict_cold(max_idle_s)

@@ -2,10 +2,13 @@
 
 Per step: train_step (jit) -> heartbeat -> straggler stats. Every
 ``ckpt_every`` steps the loop hands the (host-fetched) state to the
-distributed checkpointer, which writes node-local shards and drains /
-replicates asynchronously — the loop never blocks on the external tier.
-On failure (dead heartbeat), ``run`` restores from the latest checkpoint
-(buddy shards if needed) and resumes — the paper's §II-A resume story.
+TieredIO engine via ``save_async`` — even the node-local pmem write now
+overlaps the next step's compute; the loop only ever blocks on slot
+backpressure (a write two checkpoints old still in flight). In-flight
+futures are joined exactly twice: at clean shutdown, and (via
+``TieredIO.quiesce``) before a failure restore so the checkpoint index
+is stable and errors from dead nodes are swallowed — the paper's §II-A
+resume story over the §V-B data scheduler.
 """
 from __future__ import annotations
 
@@ -57,24 +60,40 @@ def run(train_step_fn: Callable, params, opt_state,
             cluster.heartbeat.beat(nid, step)
             sd.record(nid, dt)
         if (step + 1) % loop_cfg.ckpt_every == 0:
+            # fail fast: a checkpoint that failed to COMMIT must surface
+            # now, not after hours of unprotected training
+            cluster.tiered.raise_if_failed()
             t0 = time.time()
             host_state = {"params": jax.tree.map(np.asarray, params),
                           "opt": jax.tree.map(np.asarray, opt_state)}
             base = last_full if loop_cfg.delta_ckpt else None
-            cluster.checkpointer.save(step + 1, host_state, base_step=base,
+            cluster.tiered.save_async(step + 1, host_state, base_step=base,
                                       drain=bool(loop_cfg.drain_every))
             if not loop_cfg.delta_ckpt or last_full is None:
                 last_full = step + 1
+            # what the step pays: the submit (+ any slot backpressure)
             state.ckpt_seconds.append(time.time() - t0)
         if fault_at is not None and step + 1 == fault_at:
-            # simulate node loss; recover from buddy shards
+            # simulate node loss at a replication-quiescent point: join
+            # in-flight saves/replicas BEFORE the kill so the hook
+            # deterministically exercises buddy recovery. (A failure
+            # landing inside the replication window instead loses the
+            # un-replicated tail; restore_latest_recoverable walks back
+            # to the newest fully-replicated checkpoint in that case.)
+            # Going through recovery.quiesce_inflight records any
+            # swallowed errors on the recovery object for forensics.
+            cluster.recovery.quiesce_inflight()
             victim = cluster.node_ids[-1]
             cluster.kill_node(victim)
-            restored, manifest = cluster.checkpointer.restore(
-                lost_nodes=[victim])
+            restored, manifest = \
+                cluster.checkpointer.restore_latest_recoverable(
+                    lost_nodes=[victim])
             params = jax.tree.map(jax.numpy.asarray, restored["params"])
             opt_state = jax.tree.map(jax.numpy.asarray, restored["opt"])
             state.recovered_at.append(step + 1)
             fault_at = None
+    # clean shutdown: strict barrier — a run whose checkpoints silently
+    # all failed must not report success
+    cluster.tiered.join()
     cluster.checkpointer.wait_async()
     return state

@@ -18,6 +18,17 @@ def cluster():
 
 
 @pytest.fixture()
+def cluster_slow_external():
+    """Cluster whose external tier is throttled to 1 MB/s — async paths
+    must hide it; blocking ones would visibly stall."""
+    from repro.core.cluster import SimCluster
+    root = Path(tempfile.mkdtemp(prefix="repro_test_"))
+    c = SimCluster(root, n_nodes=2, external_bandwidth=1e6)
+    yield c
+    c.shutdown()
+
+
+@pytest.fixture()
 def cluster_delta():
     from repro.core.cluster import SimCluster
     root = Path(tempfile.mkdtemp(prefix="repro_test_"))

@@ -39,13 +39,15 @@ def test_crash_consistency_partial_write(cluster):
     """A crash mid-write (data written, manifest NOT committed) must leave
     the previous checkpoint restorable."""
     t1 = _tree(1)
-    cluster.checkpointer.save(1, t1)
+    man1 = cluster.checkpointer.save(1, t1)
     cluster.checkpointer.wait_async()
-    # simulate a crash during step-2 save: write node data without manifest
+    # simulate a crash during step-2 save: write node data into the
+    # shadow slot (the one the next save would use) without a manifest
     t2 = _tree(2)
     from repro.core.object_store import _flatten
     leaves = dict(_flatten(t2))
-    cluster.stores["node0"].put("ckpt/slot0", leaves)  # garbage, no commit
+    shadow = (man1["slot"] + 1) % cluster.checkpointer.slots
+    cluster.stores["node0"].put(f"ckpt/slot{shadow}", leaves)
     assert cluster.checkpointer.latest_step() == 1
     out, man = cluster.checkpointer.restore()
     assert man["step"] == 1

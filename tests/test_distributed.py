@@ -121,7 +121,7 @@ def test_moe_decode_2d_experts(n_experts):
 def test_compressed_psum():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
-    from jax import shard_map
+    from repro.distributed.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.launch.mesh import make_mesh
     from repro.distributed.compression import (
