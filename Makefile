@@ -1,15 +1,20 @@
 # Developer entry points. `make verify` is the tier-1 gate every PR must
 # keep green (same command CI runs).
 PY ?= python
+# bash, not sh: the timed targets below use the `time` shell builtin
+# (dash has none, and /usr/bin/time isn't guaranteed to exist)
+SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test-fast bench lint
 
+# `time` prefix: suite duration is surfaced wherever verify runs,
+# including the GitHub Actions log (CI calls these targets).
 verify:
-	$(PY) -m pytest -x -q
+	time $(PY) -m pytest -x -q
 
 test-fast:
-	$(PY) -m pytest -x -q -m "not slow"
+	time $(PY) -m pytest -x -q -m "not slow"
 
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py

@@ -17,14 +17,15 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_checkpoint, bench_io_scaling,
-                            bench_kernels, bench_staging, bench_tiered_io,
-                            bench_tiering)
+                            bench_kernels, bench_replication,
+                            bench_staging, bench_tiered_io, bench_tiering)
     suites = {
         "io_scaling": bench_io_scaling.run,       # paper Table I
         "checkpoint": bench_checkpoint.run,       # async/delta claims (§V.8)
         "staging": bench_staging.run,             # burst buffer (Fig. 8)
         "tiering": bench_tiering.run,             # SLM/DLM modes (§II-B)
         "tiered_io": bench_tiered_io.run,         # unified engine (Fig. 4+8)
+        "replication": bench_replication.run,     # ack-ranked recovery
         "kernels": bench_kernels.run,
     }
     print("name,us_per_call,derived")

@@ -20,6 +20,7 @@ Shard layout: each leaf is split along dim 0 across nodes when divisible
 """
 from __future__ import annotations
 
+import threading
 import time
 import zlib
 from dataclasses import dataclass
@@ -32,6 +33,23 @@ from repro.core.object_store import (PMemObjectStore, _flatten, _unflatten)
 from repro.kernels.ckpt_codec.ref import decode_ref, encode_ref
 
 TILE = 1024
+
+
+def _merge_acks(maps: Sequence[Dict[str, Dict[str, dict]]]
+                ) -> Dict[str, Dict[str, dict]]:
+    """Union per-node ack maps from divergent manifest copies; for the
+    same (node, kind) the newest record (by its own ``ts``) wins."""
+    merged: Dict[str, Dict[str, dict]] = {}
+    for m in maps:
+        for nid, kinds in m.items():
+            if not isinstance(kinds, dict):
+                continue
+            cur = merged.setdefault(nid, {})
+            for kind, rec in kinds.items():
+                if kind not in cur or \
+                        rec.get("ts", 0) > cur[kind].get("ts", 0):
+                    cur[kind] = rec
+    return merged
 
 
 @dataclass
@@ -69,6 +87,22 @@ class DistributedCheckpointer:
         self.slots = slots
         self._pending: List = []
         self._slot_counter: Optional[int] = None
+        # replicate/drain fan-out is owned by a TieredIO ReplicationChannel
+        # (attached by the engine, or created lazily for standalone use);
+        # its ack writes serialise on this lock.
+        self.replication = None
+        self._ack_lock = threading.Lock()
+        # step -> manifest-with-acks as last written by THIS process:
+        # acks for one checkpoint arrive in bursts from 2N scheduler
+        # tasks, so cache the merged state and pay the cross-pool READ
+        # only once per step (writes still go to every live pool)
+        self._ack_cache: Dict[int, dict] = {}
+        # step -> slot, so hot save paths (delta base avoidance) don't
+        # re-read the full base manifest from every pool; _slot_pin
+        # protects the active delta base from cache trimming
+        self._slot_cache: Dict[int, int] = {}
+        self._slot_pin: Optional[int] = None
+        self.last_restore_stats: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
     def _meta_store(self) -> PMemObjectStore:
@@ -89,13 +123,42 @@ class DistributedCheckpointer:
             raise IOError(f"no reachable pool for metadata {name}")
 
     def _meta_get_json(self, name: str):
+        """Resolve metadata across ALL reachable pools, not just the
+        first one that answers: a rejoined node (say node0 back from the
+        dead with a stale ``ckpt/latest.json``) must never shadow newer
+        replicated metadata. The winner is the copy with the highest
+        ``step`` (then newest ``ts``); per-node ack maps are additionally
+        UNION-merged across copies, because acks recorded while some pool
+        was down only exist on the pools that were live at ack time."""
+        copies: List[dict] = []
         err: Optional[Exception] = None
         for nid in self.nodes:
             try:
-                return self.stores[nid].pool.get_json(name)
+                copies.append(self.stores[nid].pool.get_json(name))
             except (IOError, FileNotFoundError) as e:
                 err = e
-        raise err if err is not None else FileNotFoundError(name)
+        if not copies:
+            raise err if err is not None else FileNotFoundError(name)
+
+        def rank(c) -> Tuple[float, float]:
+            step = c.get("step") if isinstance(c, dict) else None
+            ts = c.get("ts") if isinstance(c, dict) else None
+            return (step if isinstance(step, (int, float)) else float("-inf"),
+                    ts if isinstance(ts, (int, float)) else float("-inf"))
+
+        best = max(copies, key=rank)
+        if isinstance(best, dict) and isinstance(best.get("acks"), dict):
+            # merge ack maps ONLY from copies of the same incarnation
+            # (same step+ts): a re-saved step's stale record, stranded
+            # on a pool that was down at seed time, must not resurrect
+            # acks describing the previous incarnation's slots
+            best_rank = rank(best)
+            best = dict(best)
+            best["acks"] = _merge_acks(
+                [c["acks"] for c in copies if isinstance(c, dict)
+                 and isinstance(c.get("acks"), dict)
+                 and rank(c) == best_rank])
+        return best
 
     def _alloc_slot(self, avoid: Optional[int] = None) -> int:
         """Round-robin slot rotation. Raw ``step % slots`` degenerates to
@@ -153,9 +216,13 @@ class DistributedCheckpointer:
         leaves = dict(_flatten(tree))
         avoid = None
         if base_step is not None and self.delta:
-            # never rotate onto the slot holding the delta base
-            avoid = self._meta_get_json(
-                f"ckpt/manifest_step{base_step}.json")["slot"]
+            # never rotate onto the slot holding the delta base (cached
+            # at save time; cross-pool manifest read only after restart)
+            avoid = self._slot_cache.get(base_step)
+            if avoid is None:
+                avoid = self._meta_get_json(
+                    f"ckpt/manifest_step{base_step}.json")["slot"]
+                self._slot_cache[base_step] = avoid
         slot = self._alloc_slot(avoid)
         ring = self._live_nodes()
         manifest: Dict[str, Any] = {
@@ -178,25 +245,102 @@ class DistributedCheckpointer:
         for nid in ring:
             payload = per_node[nid]
             if base_step is not None and self.delta:
-                payload = self._encode_delta(nid, payload, base_step)
+                # avoid IS the base slot — no per-node manifest re-read
+                payload = self._encode_delta(nid, payload, base_step,
+                                             avoid)
             self.stores[nid].put(obj, payload, version=0,
                                  meta={"step": step})
-        # commit point AFTER all node writes are flushed:
+        # commit point AFTER all node writes are flushed. The ack map
+        # lives in a small sibling record (ckpt/acks_step<N>.json) so
+        # each ack rewrites ~a hundred bytes, not the whole leaves
+        # index; its absence marks a pre-ack legacy step (always probed).
         self._meta_put_json(f"ckpt/manifest_step{step}.json", manifest)
-        self._meta_put_json("ckpt/latest.json", {"step": step})
-        # async post-commit work (never blocks the step loop)
+        self._meta_put_json("ckpt/latest.json",
+                            {"step": step, "ts": manifest["ts"]})
+        with self._ack_lock:
+            # seed (and invalidate any stale copy of) the ack record for
+            # this step: a re-save after recovery must not resurrect
+            # acks that described the previous incarnation's slots.
+            # ring + delta_base recorded here too: the recoverability
+            # ranking then needs only small metadata reads per skipped
+            # step, and can follow the delta chain without manifests.
+            # ts = this save's commit time: the incarnation tag that
+            # outranks (and excludes from merge) any stale record left
+            # from an earlier save of the same step number
+            fresh = {"step": step, "ts": manifest["ts"], "acks": {},
+                     "ring": ring, "delta_base": manifest["delta_base"]}
+            self._meta_put_json(self._ack_name(step), fresh)
+            self._ack_cache[step] = fresh
+            self._trim_ack_cache_locked()
+            self._slot_cache[step] = slot
+            # pin what the next delta will read: the base just used, or
+            # this full save (the likely next base)
+            self._slot_pin = base_step if (
+                base_step is not None and self.delta) else step
+            extra = [k for k in sorted(self._slot_cache)
+                     if k != self._slot_pin]
+            while len(self._slot_cache) > max(self.slots, 2) + 1 and extra:
+                self._slot_cache.pop(extra.pop(0))
+        # async post-commit work (never blocks the step loop): the
+        # replicate/drain fan-out lives in the TieredIO replication
+        # channel, which records per-node acks into the manifest.
         sink = self._pending if post_commit is None else post_commit
-        if self.scheduler is not None:
-            if self.buddy and len(ring) > 1:
-                for nid in ring:
-                    sink.append(self.scheduler.replicate(
-                        nid, obj, self.buddy_of(nid, ring)))
-            if drain and self.external is not None:
-                for nid in ring:
-                    sink.append(self.scheduler.drain(
-                        nid, obj, f"ckpt_step{step}_{nid}",
-                        expect_meta={"step": step}))
+        chan = self._replication_channel()
+        if chan is not None:
+            chan.submit(manifest, drain=drain, sink=sink)
         return manifest
+
+    def _replication_channel(self):
+        """The attached TieredIO ReplicationChannel, or a lazily-created
+        default one so a standalone checkpointer (benchmarks, elastic
+        relaunch) still replicates with acks. Import is function-local:
+        tiered_io imports this module at top level."""
+        if self.replication is None and self.scheduler is not None:
+            from repro.core.tiered_io import ReplicationChannel
+            self.replication = ReplicationChannel(self, self.scheduler)
+        return self.replication
+
+    # ---- per-node acknowledgement map --------------------------------
+    @staticmethod
+    def _ack_name(step: int) -> str:
+        return f"ckpt/acks_step{step}.json"
+
+    def _trim_ack_cache_locked(self) -> None:
+        # bound the cache to the live shadow-slot window
+        while len(self._ack_cache) > max(self.slots, 2):
+            self._ack_cache.pop(min(self._ack_cache))
+
+    def record_ack(self, step: int, nid: str, kind: str,
+                   info: Optional[dict] = None) -> None:
+        """Record one completed replicate ("replica") or drain ("drain")
+        for ``nid`` at ``step`` into the manifest's per-node ack map
+        (persisted as the sibling ``ckpt/acks_step<N>.json`` record,
+        replicated to every live pool). Called from scheduler worker
+        threads on task completion; the read-merge-write is serialised
+        on ``_ack_lock`` and merges records across pool copies so
+        concurrent acks and partial pool outages never lose acks."""
+        name = self._ack_name(step)
+        with self._ack_lock:
+            rec_map = self._ack_cache.get(step)
+            if rec_map is None:
+                try:
+                    rec_map = self._meta_get_json(name)
+                except (IOError, FileNotFoundError):
+                    rec_map = {"step": step, "acks": {}}
+            rec = dict(info or {})
+            rec["ts"] = time.time()
+            rec_map.setdefault("acks", {}).setdefault(nid, {})[kind] = rec
+            self._meta_put_json(name, rec_map)
+            self._ack_cache[step] = rec_map
+            self._trim_ack_cache_locked()
+
+    def acks(self, step: int) -> Dict[str, Dict[str, dict]]:
+        """The merged per-node ack map for ``step`` ({} if unknown)."""
+        try:
+            rec_map = self._meta_get_json(self._ack_name(step))
+        except (IOError, FileNotFoundError):
+            return {}
+        return dict(rec_map.get("acks") or {})
 
     def wait_async(self) -> None:
         for f in self._pending:
@@ -204,10 +348,7 @@ class DistributedCheckpointer:
         self._pending = []
 
     # ------------------------------------------------------------------
-    def _encode_delta(self, nid, payload, base_step):
-        base_man = self._meta_get_json(
-            f"ckpt/manifest_step{base_step}.json")
-        base_slot = base_man["slot"]
+    def _encode_delta(self, nid, payload, base_step, base_slot):
         self._check_slot_step(self.stores[nid], f"ckpt/slot{base_slot}",
                               base_step)
         base = self.stores[nid].get(f"ckpt/slot{base_slot}")
@@ -287,14 +428,32 @@ class DistributedCheckpointer:
                     steps.add(int(name[len(prefix):-len(suffix)]))
         return sorted(steps)
 
-    def restore_latest_recoverable(self, *, lost_nodes: Sequence[str] = ()):
+    def restore_latest_recoverable(self, *, lost_nodes: Sequence[str] = (),
+                                   use_acks: bool = True):
         """Walk committed steps newest-first and restore the first one
         whose shards (or buddy replicas, for ``lost_nodes``) are all
         readable. A node can die between a checkpoint's commit and its
         replication finishing; that checkpoint is then unrecoverable and
-        recovery must fall back to the previous one."""
+        recovery must fall back to the previous one.
+
+        With ``use_acks`` (default), steps are ranked by acknowledged
+        durability first: a step whose ack map shows a lost shard owner
+        without a completed replica ack — or whose replica landed on
+        another lost node — is skipped on metadata alone, WITHOUT any
+        store reads. Probing (attempting the restore) happens only for
+        steps the acks mark plausible, or for pre-ack legacy manifests.
+        ``last_restore_stats`` records the skipped/probed split
+        (benchmarks/bench_replication.py measures the gap vs probe-all).
+        """
         last_err: Optional[Exception] = None
+        stats = {"skipped_by_ack": 0, "probed": 0}
+        self.last_restore_stats = stats
         for step in reversed(self.available_steps()):
+            if use_acks and lost_nodes and \
+                    not self._acks_plausible(step, lost_nodes):
+                stats["skipped_by_ack"] += 1
+                continue
+            stats["probed"] += 1
             try:
                 return self.restore(step, lost_nodes=lost_nodes)
             except (IOError, FileNotFoundError, KeyError) as e:
@@ -302,6 +461,35 @@ class DistributedCheckpointer:
         raise IOError(
             f"no recoverable checkpoint with lost_nodes={list(lost_nodes)}"
         ) from last_err
+
+    def _acks_plausible(self, step: int,
+                        lost_nodes: Sequence[str]) -> bool:
+        """Metadata-only recoverability check — ONE small JSON read:
+        every lost node that held shards at ``step`` (i.e. was in the
+        save ring the ack record captured) must have an acknowledged
+        replica on a surviving node. Steps without an ack record
+        (pre-ack saves, or the record lost with its pools) stay
+        plausible — the probing restore is then the arbiter."""
+        try:
+            rec_map = self._meta_get_json(self._ack_name(step))
+        except (IOError, FileNotFoundError):
+            return True
+        ring = rec_map.get("ring") or self.nodes
+        acks = rec_map.get("acks") or {}
+        for nid in lost_nodes:
+            if nid not in ring:
+                continue  # held no shards at this step
+            rec = acks.get(nid, {}).get("replica")
+            if not rec:
+                return False  # died between commit and replica ack
+            if rec.get("target") in lost_nodes:
+                return False  # replica landed on another dead node
+        base = rec_map.get("delta_base")
+        if base is not None and base < step:  # bases are strictly older
+            # a delta restore also reads the base chain: rank by ITS
+            # acks too, or the probe pays for an undecodable step
+            return self._acks_plausible(base, lost_nodes)
+        return True
 
     @staticmethod
     def _check_slot_step(store: PMemObjectStore, name: str,

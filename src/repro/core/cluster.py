@@ -25,7 +25,7 @@ class SimCluster:
                  pmem_capacity: int = 1 << 32,
                  external_bandwidth: Optional[float] = None,
                  buddy: bool = True, delta: bool = False,
-                 dlm_capacity: int = 1 << 28):
+                 dlm_capacity: int = 1 << 28, slots: int = 2):
         self.root = Path(root)
         self.node_ids = [f"node{i}" for i in range(n_nodes)]
         self.pools: Dict[str, PMemPool] = {
@@ -40,7 +40,7 @@ class SimCluster:
         self.view = DistributedStore(self.stores)
         self.checkpointer = DistributedCheckpointer(
             self.stores, self.scheduler, self.external, buddy=buddy,
-            delta=delta)
+            delta=delta, slots=slots)
         self.heartbeat = Heartbeat(self.stores)
         # the unified async I/O engine (checkpoint + KV tiering + staging)
         self.dlm = DLMCache(self.stores[self.node_ids[0]],

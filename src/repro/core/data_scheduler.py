@@ -64,6 +64,22 @@ class SupersededError(IOError):
     newer object's own transfer covers it. Collected, never fatal."""
 
 
+def _check_expect_meta(man: dict, expect_meta: Optional[dict],
+                       verb: str, obj_name: str) -> None:
+    """Pin the object identity a queued transfer was meant for: raise
+    SupersededError when the snapshotted meta no longer matches (the
+    source was rewritten between submit and run)."""
+    if not expect_meta:
+        return
+    got = man.get("meta", {})
+    stale = {k: got.get(k) for k in expect_meta
+             if got.get(k) != expect_meta[k]}
+    if stale:
+        raise SupersededError(
+            f"{verb} {obj_name}: source changed before {verb} ran "
+            f"(wanted {expect_meta}, found {stale})")
+
+
 @dataclass(order=True)
 class _Task:
     priority: int
@@ -141,7 +157,9 @@ class DataScheduler:
     def drain(self, nid: str, obj_name: str, external_name: str,
               version: int = 0, priority: int = 1,
               delete_after: bool = False,
-              expect_meta: Optional[dict] = None) -> Future:
+              expect_meta: Optional[dict] = None,
+              on_complete: Optional[Callable[[Any], None]] = None
+              ) -> Future:
         def go():
             # one manifest snapshot + CRC so a concurrent overwrite of
             # the source (checkpoint slot reuse) raises instead of
@@ -156,27 +174,32 @@ class DataScheduler:
                 raise SupersededError(
                     f"drain {obj_name}: source rewritten before drain "
                     f"ran ({e})") from e
-            if expect_meta:
-                got = man.get("meta", {})
-                stale = {k: got.get(k) for k in expect_meta
-                         if got.get(k) != expect_meta[k]}
-                if stale:
-                    raise SupersededError(
-                        f"drain {obj_name}: source changed before drain "
-                        f"ran (wanted {expect_meta}, found {stale})")
+            _check_expect_meta(man, expect_meta, "drain", obj_name)
             self.external.put(external_name, tree)
             self.stats[nid]["drained"] += man["nbytes"]
             if delete_after:
                 self.stores[nid].delete(obj_name, version)
+            # ack hook: runs INSIDE the task, after the external copy is
+            # durable, so a recorded ack always describes a finished
+            # transfer; if recording fails, the task (and its future)
+            # fails and no one can mistake the step for drained.
+            if on_complete is not None:
+                on_complete(external_name)
             return external_name
         return self._submit(nid, go, priority)
 
     def replicate(self, src: str, obj_name: str, dst: str,
                   version: int = 0, priority: int = 2,
-                  dst_name: Optional[str] = None) -> Future:
+                  dst_name: Optional[str] = None,
+                  expect_meta: Optional[dict] = None,
+                  on_complete: Optional[Callable[[Any], None]] = None
+                  ) -> Future:
         """Copy an object to another node's pmem under ``dst_name``
         (defaults to replica/<src>/<obj> so it never shadows the
-        destination's own objects)."""
+        destination's own objects). ``expect_meta`` pins the object
+        identity the caller intended (e.g. the checkpoint step);
+        ``on_complete`` runs inside the task once the replica is placed —
+        the replication channel uses it to record per-node acks."""
         name = dst_name or f"replica/{src}/{obj_name}"
 
         def go():
@@ -193,10 +216,15 @@ class DataScheduler:
                 raise SupersededError(
                     f"replicate {obj_name}: source rewritten before "
                     f"replication ran ({e})") from e
+            _check_expect_meta(src_man, expect_meta, "replicate", obj_name)
             man = self.stores[dst].put(name, tree, version,
                                        meta={**src_man.get("meta", {}),
                                              "replica_of": src})
             self.stats[src]["replicated"] += man["nbytes"]
+            # ack hook after the replica is durable on ``dst`` — a
+            # failure here fails the task, never records a false ack
+            if on_complete is not None:
+                on_complete(man)
             return man
         return self._submit(src, go, priority)
 

@@ -80,6 +80,10 @@ class FailureRecovery:
         self.timeout_s = timeout_s
         self.tiered = tiered          # Optional[TieredIO]
         self.inflight_errors: List[Exception] = []
+        # how the last recovery picked its step: {"skipped_by_ack": n,
+        # "probed": m} — steps ruled out on the manifest ack map alone
+        # vs. steps that needed an actual restore attempt
+        self.last_restore_stats: dict = {}
 
     def quiesce_inflight(self) -> List[Exception]:
         """Consume every in-flight TieredIO future before reading the
@@ -94,8 +98,10 @@ class FailureRecovery:
 
     def check_and_recover(self, now: Optional[float] = None):
         """Returns None if healthy, else (restored_tree, manifest,
-        dead_nodes) — restored from the latest checkpoint with dead nodes'
-        shards served by their buddies."""
+        dead_nodes) — restored from the newest checkpoint whose ack map
+        marks it recoverable for the dead set (steps that died between
+        commit and replica ack are skipped on metadata alone), with dead
+        nodes' shards served by their buddies."""
         dead = self.hb.dead_nodes(self.timeout_s, now)
         if not dead:
             return None
@@ -104,4 +110,5 @@ class FailureRecovery:
             raise RuntimeError(f"nodes {dead} dead and no checkpoint exists")
         tree, manifest = self.ckpt.restore_latest_recoverable(
             lost_nodes=dead)
+        self.last_restore_stats = dict(self.ckpt.last_restore_stats)
         return tree, manifest, dead

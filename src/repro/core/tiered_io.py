@@ -30,6 +30,33 @@ Backpressure: at most ``checkpointer.slots`` save tickets may be in
 flight; submitting another blocks until the oldest commits. Combined
 with the FIFO I/O thread this guarantees a slot is never overwritten
 while a write to it is still in flight.
+
+Replication channel and the ``SaveTicket.durability()`` contract
+----------------------------------------------------------------
+Checkpoint replicate/drain fan-out is a first-class TieredIO channel
+(``ReplicationChannel``), not an inline step of the checkpointer: each
+replicate/drain task records a per-node ACK into the manifest's ack map
+(replicated to every live pool) the moment its transfer is durable.
+``SaveTicket.durability()`` reports the acknowledged durability level:
+
+  "PENDING"     the node-local commit has not finished yet;
+  "FAILED"      the commit itself raised (nothing durable);
+  "LOCAL"       committed to node-local pmem only — a node loss inside
+                this window loses the step (recovery walks back);
+  "REPLICATED"  every shard owner has an acknowledged buddy replica —
+                any single node loss is recoverable over the fabric;
+  "DRAINED"     every shard owner's drain to the external store has
+                been acknowledged — survives cluster-wide pmem loss.
+
+Levels are monotonic in that order; DRAINED ranks above REPLICATED even
+when replication was disabled (external durability subsumes it). The
+levels are derived from the PERSISTED ack map, not in-process futures,
+so ``restore_latest_recoverable`` ranks steps by the same records after
+a crash: a step whose ack map shows a lost shard owner without a replica
+ack is skipped without a single store read. The channel also replicates
+DLM objects (``offload``) to the home node's buddy, and the DLM cache
+falls back to ``replica/<nid>/dlm/...`` reads when the home pool is
+dead — the multi-node DLM of the roadmap.
 """
 from __future__ import annotations
 
@@ -43,6 +70,11 @@ from repro.core.data_scheduler import DataScheduler, SupersededError
 from repro.core.tiering import DLMCache
 
 
+#: acknowledged durability levels, weakest to strongest (module
+#: docstring has the full contract)
+DURABILITY_LEVELS = ("PENDING", "FAILED", "LOCAL", "REPLICATED", "DRAINED")
+
+
 class SaveTicket:
     """Handle for one asynchronous checkpoint save.
 
@@ -50,13 +82,17 @@ class SaveTicket:
     rename) finishes and returns the global manifest. ``post_commit``
     holds the background drain/replicate futures, which may complete —
     or fail, e.g. when a buddy node dies — long after the commit.
+    ``durability()`` reports the acknowledged durability level from the
+    persisted ack map (see module docstring).
     """
 
-    def __init__(self, step: int, slot: Optional[int] = None):
+    def __init__(self, step: int, slot: Optional[int] = None,
+                 checkpointer: Optional[DistributedCheckpointer] = None):
         self.step = step
         self.slot = slot  # filled in once the writer allocates it
         self.future: Future = Future()
         self.post_commit: List[Future] = []
+        self._checkpointer = checkpointer
 
     def result(self, timeout: Optional[float] = None) -> dict:
         return self.future.result(timeout)
@@ -79,6 +115,108 @@ class SaveTicket:
                 errors.append(e)
         return errors
 
+    def durability(self) -> str:
+        """Acknowledged durability of this save (DURABILITY_LEVELS).
+        Reads the persisted ack map, so it stays truthful after the
+        ticket is retired and across processes — an unacked replicate
+        still in flight (or dead with its node) keeps the step LOCAL.
+        For a delta checkpoint the level is capped by the base chain's:
+        a delta whose base lost its replicas is NOT single-node-loss
+        safe, however fully its own slot replicated."""
+        if not self.future.done():
+            return "PENDING"
+        if self.future.exception() is not None:
+            return "FAILED"
+        ckpt = self._checkpointer
+        if ckpt is None:
+            return "LOCAL"
+        man = self.future.result()
+        return _acked_level(ckpt, self.step,
+                            man.get("nodes") or ckpt.nodes,
+                            man.get("delta_base"))
+
+
+_LEVEL_RANK = {lvl: i for i, lvl in enumerate(DURABILITY_LEVELS)}
+
+
+def _acked_level(ckpt: DistributedCheckpointer, step: int,
+                 ring: Sequence[str], delta_base: Optional[int]) -> str:
+    acks = ckpt.acks(step)
+    if ring and all(acks.get(n, {}).get("drain") for n in ring):
+        level = "DRAINED"
+    elif len(ring) > 1 and \
+            all(acks.get(n, {}).get("replica") for n in ring):
+        level = "REPLICATED"
+    else:
+        level = "LOCAL"
+    if delta_base is not None and delta_base < step:
+        try:
+            bman = ckpt._meta_get_json(
+                f"ckpt/manifest_step{delta_base}.json")
+        except (IOError, FileNotFoundError):
+            return "LOCAL"  # base manifest gone: chain not protected
+        base_level = _acked_level(ckpt, delta_base,
+                                  bman.get("nodes") or ckpt.nodes,
+                                  bman.get("delta_base"))
+        if _LEVEL_RANK[base_level] < _LEVEL_RANK[level]:
+            level = base_level
+    return level
+
+
+class ReplicationChannel:
+    """First-class replicate/drain fan-out with per-node acks.
+
+    One ``submit`` per committed checkpoint: every shard owner's slot
+    object is replicated to its ring buddy (and optionally drained to
+    the external store) through the data scheduler, and each task
+    records its ack into the manifest's ack map the moment the transfer
+    is durable. A superseded or failed transfer records nothing — the
+    ack map can under-promise durability, never over-promise it.
+    """
+
+    def __init__(self, checkpointer: DistributedCheckpointer,
+                 scheduler: DataScheduler):
+        self.checkpointer = checkpointer
+        self.scheduler = scheduler
+
+    def submit(self, manifest: dict, *, drain: bool = False,
+               sink: Optional[List[Future]] = None) -> List[Future]:
+        ckpt = self.checkpointer
+        step, slot = manifest["step"], manifest["slot"]
+        ring = manifest.get("nodes") or ckpt.nodes
+        obj = f"ckpt/slot{slot}"
+        futs: List[Future] = []
+        if ckpt.buddy and len(ring) > 1:
+            for nid in ring:
+                buddy = ckpt.buddy_of(nid, ring)
+                futs.append(self.scheduler.replicate(
+                    nid, obj, buddy, expect_meta={"step": step},
+                    on_complete=self._ack(step, nid, "replica",
+                                          {"target": buddy})))
+        if drain and ckpt.external is not None:
+            for nid in ring:
+                ext = f"ckpt_step{step}_{nid}"
+                futs.append(self.scheduler.drain(
+                    nid, obj, ext, expect_meta={"step": step},
+                    on_complete=self._ack(step, nid, "drain",
+                                          {"external": ext})))
+        if sink is not None:
+            sink.extend(futs)
+        return futs
+
+    def replicate_object(self, src: str, name: str, dst: str) -> Future:
+        """Replicate a non-checkpoint pmem object (DLM page, session
+        state) to a buddy node — readable as ``replica/<src>/<name>``
+        when the home pool dies (multi-node DLM fallback)."""
+        return self.scheduler.replicate(src, name, dst)
+
+    def _ack(self, step: int, nid: str, kind: str, info: dict):
+        ckpt = self.checkpointer
+
+        def record(_result) -> None:
+            ckpt.record_ack(step, nid, kind, info)
+        return record
+
 
 class TieredIO:
     """Async engine over checkpointer + scheduler + DLM cache."""
@@ -90,6 +228,24 @@ class TieredIO:
         self.checkpointer = checkpointer
         self.scheduler = scheduler
         self.cache = cache
+        # the replication channel owns ALL replicate/drain fan-out; the
+        # checkpointer delegates to it at every save commit
+        self.replication: Optional[ReplicationChannel] = None
+        if checkpointer is not None and scheduler is not None:
+            self.replication = ReplicationChannel(checkpointer, scheduler)
+            checkpointer.replication = self.replication
+        # home node of the DLM cache (whose store it fronts): replica
+        # fallback reads resolve relative to it
+        self._home_nid: Optional[str] = None
+        if checkpointer is not None:
+            self._home_nid = checkpointer.nodes[0]
+            if cache is not None:
+                for nid, st in checkpointer.stores.items():
+                    if st is cache.store:
+                        self._home_nid = nid
+                        break
+                if cache.fallback_reader is None:
+                    cache.fallback_reader = self._dlm_replica_read
         self.max_inflight = max_inflight_saves or (
             checkpointer.slots if checkpointer is not None else 2)
         self.errors: List[Exception] = []       # post-commit failures
@@ -121,7 +277,7 @@ class TieredIO:
         backpressure); the write overlaps the caller's next step."""
         assert self.checkpointer is not None, "no checkpointer attached"
         ckpt = self.checkpointer
-        ticket = SaveTicket(step)
+        ticket = SaveTicket(step, checkpointer=ckpt)
         retiring: List[SaveTicket] = []
         with self._lock:
             self._prune_done_locked()
@@ -171,14 +327,19 @@ class TieredIO:
         doesn't continue for hours believing it is protected while every
         save fails. Post-commit drain/replicate errors (e.g. a dead
         buddy) are NOT raised here — they degrade durability, not the
-        node-local checkpoint itself."""
+        node-local checkpoint itself.
+
+        The raised error is POPPED: one failed commit surfaces exactly
+        once, so a run that recovers (e.g. restores and resumes on the
+        survivors) is not re-failed forever at every later boundary by
+        the same stale record."""
         with self._lock:
             for t in list(self._tickets):
                 if t.done() and t.exception() is not None:
                     self.save_errors.append(t.exception())
                     self._tickets.remove(t)
             if self.save_errors:
-                raise self.save_errors[0]
+                raise self.save_errors.pop(0)
 
     def _prune_done_locked(self) -> None:
         """Drop fully-completed retired tickets and offload/prefetch
@@ -217,10 +378,13 @@ class TieredIO:
             return self._tickets[-1] if self._tickets else None
 
     # ---- object channel (serve KV pages, session state) --------------
-    def offload(self, name: str, tree) -> Future:
+    def offload(self, name: str, tree, *, replicate: bool = True) -> Future:
         """Persist an object through the DLM write-back cache (or the
         checkpointer's meta store when no cache is attached). The future
-        resolves once the object is durable in pmem."""
+        resolves once the object is durable in the home node's pmem;
+        with ``replicate`` (default) a buddy replica is then queued
+        through the replication channel so reads survive the home
+        node's death (multi-node DLM)."""
 
         def _persist():
             if self.cache is not None:
@@ -230,6 +394,19 @@ class TieredIO:
                 assert self.checkpointer is not None
                 self.checkpointer._meta_store().put(f"dlm/{name}", tree)
             self.stats["offloads"] += 1
+            ckpt = self.checkpointer
+            if (replicate and self.replication is not None
+                    and ckpt is not None and self._home_nid is not None):
+                # buddy from the LIVE ring, like the checkpoint path:
+                # after the static buddy dies, replicas must land on a
+                # survivor instead of failing forever
+                ring = ckpt._live_nodes()
+                if self._home_nid in ring and len(ring) > 1:
+                    buddy = ckpt.buddy_of(self._home_nid, ring)
+                    rfut = self.replication.replicate_object(
+                        self._home_nid, f"dlm/{name}", buddy)
+                    with self._lock:
+                        self._futures.append(rfut)
             return name
 
         fut = self._submit(_persist)
@@ -237,6 +414,33 @@ class TieredIO:
             self._prune_done_locked()
             self._futures.append(fut)
         return fut
+
+    def _dlm_replica_read(self, name: str):
+        """Multi-node DLM fallback: when the home node's pool is dead
+        (or no longer holds ``dlm/<name>``), read the buddy replica
+        placed by ``offload`` — preferring the home's ring buddy, then
+        any surviving node holding ``replica/<home>/dlm/<name>``."""
+        ckpt = self.checkpointer
+        home = self._home_nid
+        assert ckpt is not None and home is not None
+        rep = f"replica/{home}/dlm/{name}"
+        order = [ckpt.buddy_of(home)] + \
+            [n for n in ckpt.nodes if n != home]
+        seen = set()
+        last: Optional[Exception] = None
+        for nid in order:
+            if nid in seen or nid == home:
+                continue
+            seen.add(nid)
+            try:
+                if ckpt.stores[nid].exists(rep):
+                    return ckpt.stores[nid].get(rep)
+            except IOError as e:  # that node is dead too — keep walking
+                last = e
+        if last is not None:
+            raise last
+        raise FileNotFoundError(
+            f"dlm/{name} (home {home} unreadable and no node holds {rep})")
 
     def fetch(self, name: str):
         """Demand read through the DLM cache (hit/miss accounted), or

@@ -12,9 +12,10 @@ The mode is selected per job by the workflow scheduler (paper §V-A item 9).
 from __future__ import annotations
 
 import collections
+import random
 import threading
 import time
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -23,12 +24,19 @@ from repro.core.object_store import PMemObjectStore, _flatten, _unflatten
 
 class SLMTier:
     """Explicit two-space placement: leaves listed in ``pmem_leaves`` live
-    in the pool; the rest stay in DRAM (the returned pytree)."""
+    in the pool; the rest stay in DRAM (the returned pytree).
+
+    Every ``offload`` writes under a fresh per-tier version (threaded
+    through the store's version namespace AND stamped in the object
+    meta), and ``fetch`` validates both before merging — a racing
+    offload from another tier instance over the same store/name can no
+    longer be silently merged into this instance's resident tree."""
 
     def __init__(self, store: PMemObjectStore, name: str):
         self.store = store
         self.name = name
-        self._placed: Dict[str, int] = {}  # leaf path -> version counter
+        self._placed: Dict[str, int] = {}  # leaf path -> version tag
+        self._version: Optional[int] = None  # store version of last offload
 
     def offload(self, tree, leaf_paths: Iterable[str]):
         """Move selected leaves to pmem; returns (resident_tree, handle).
@@ -36,30 +44,85 @@ class SLMTier:
         paths = set(leaf_paths)
         leaves = dict(_flatten(tree))
         off = {p: leaves[p] for p in paths if p in leaves}
-        version = int(time.time() * 1e6) % (1 << 31)
-        self.store.put(f"slm/{self.name}", off, version=0,
+        version = random.getrandbits(31) or 1
+        # reclaim the version we supersede — ours, or (after a process
+        # restart, when _version is gone) the one the head points at
+        prev = self._version
+        if prev is None:
+            try:
+                prev = self.store.pool.get_json(
+                    f"slm/{self.name}.head.json")["v"]
+            except (IOError, FileNotFoundError, KeyError):
+                prev = None
+        self.store.put(f"slm/{self.name}", off, version=version,
                        meta={"v": version})
+        # head pointer: offloaded state must survive a PROCESS restart
+        # (the point of B-APM offload) — a fresh tier instance resolves
+        # the current version from here instead of guessing
+        self.store.pool.put_json(f"slm/{self.name}.head.json",
+                                 {"v": version})
+        if prev is not None and prev != version:
+            try:
+                self.store.delete(f"slm/{self.name}", prev)
+            except OSError:
+                pass
+        self._version = version
         resident = {p: v for p, v in leaves.items() if p not in paths}
         self._placed = {p: version for p in off}
         return _unflatten(resident), sorted(off)
 
     def fetch(self, resident_tree, handle: List[str]):
-        """Stage offloaded leaves back in and merge with the resident part."""
-        off = dict(_flatten(self.store.get(f"slm/{self.name}")))
+        """Stage offloaded leaves back in and merge with the resident
+        part. Fails loudly if the pmem object is not the one THIS tier
+        placed (racing offload / tampered version tag). A fresh instance
+        (post-restart) adopts the persisted head pointer's version."""
+        name = f"slm/{self.name}"
+        if self._version is None:
+            try:  # restart recovery: adopt the last committed offload
+                self._version = self.store.pool.get_json(
+                    f"{name}.head.json")["v"]
+            except (IOError, FileNotFoundError, KeyError):
+                raise RuntimeError(f"{name}: nothing offloaded")
+        try:
+            off_tree, man = self.store.get_with_manifest(
+                name, version=self._version)
+        except FileNotFoundError as e:
+            raise IOError(
+                f"{name}@v{self._version}: offloaded leaves vanished "
+                f"(deleted or overwritten by a racing tier instance)"
+            ) from e
+        got = man.get("meta", {}).get("v")
+        if got != self._version:
+            raise IOError(
+                f"{name}: version mismatch (placed v{self._version}, "
+                f"found v{got}) — racing offload from another tier "
+                f"instance")
+        off = dict(_flatten(off_tree))
         leaves = dict(_flatten(resident_tree))
         leaves.update(off)
         return _unflatten(leaves)
 
 
 class DLMCache:
-    """LRU DRAM cache over a pmem object store (write-back)."""
+    """LRU DRAM cache over a pmem object store (write-back).
 
-    def __init__(self, store: PMemObjectStore, capacity_bytes: int):
+    Occupancy is tracked as a RUNNING byte total (O(1) per admission,
+    not O(n) re-sums per eviction), and objects larger than the whole
+    capacity BYPASS DRAM: a ``put`` writes them straight through to
+    pmem and a ``get`` serves them uncached, so one oversized object can
+    never leave the cache permanently over budget. ``fallback_reader``
+    (wired by TieredIO) serves misses from a buddy node's replica when
+    the home pool is dead — the multi-node DLM read path."""
+
+    def __init__(self, store: PMemObjectStore, capacity_bytes: int,
+                 fallback_reader: Optional[Callable[[str], Any]] = None):
         self.store = store
         self.capacity = capacity_bytes
+        self.fallback_reader = fallback_reader
         self._cache: "collections.OrderedDict[str, Any]" = \
             collections.OrderedDict()
         self._sizes: Dict[str, int] = {}
+        self._used = 0  # running sum of _sizes (cache-occupancy bytes)
         self._dirty: Dict[str, bool] = {}
         self._last_used: Dict[str, float] = {}
         self._gen: Dict[str, int] = {}  # bumped on put/evict (TOCTOU)
@@ -69,35 +132,74 @@ class DLMCache:
         self.evictions = 0
         self.prefetches = 0
         self.prefetch_hits = 0
+        self.bypasses = 0  # oversized objects served/persisted uncached
 
     def _bytes(self, tree) -> int:
         return sum(np.asarray(a).nbytes for _, a in _flatten(tree))
+
+    def used_bytes(self) -> int:
+        with self._lock:
+            return self._used
 
     def _evict_one(self, name: str) -> None:
         """Drop ``name`` from DRAM (write-back if dirty). Lock held."""
         tree = self._cache.pop(name)
         if self._dirty.pop(name, False):
             self.store.put(f"dlm/{name}", tree)  # write-back
-        self._sizes.pop(name, None)
+        self._used -= self._sizes.pop(name, 0)
         self._last_used.pop(name, None)
         self._gen[name] = self._gen.get(name, 0) + 1
         self.evictions += 1
 
     def _evict_until_fits(self, incoming: int) -> None:
-        while self._cache and \
-                sum(self._sizes.values()) + incoming > self.capacity:
+        while self._cache and self._used + incoming > self.capacity:
             self._evict_one(next(iter(self._cache)))  # LRU head
+
+    def _drop_stale(self, name: str) -> None:
+        """Remove a superseded entry WITHOUT write-back (the caller is
+        replacing it); keeps the running total exact. Lock held."""
+        if name in self._cache:
+            self._cache.pop(name)
+            self._used -= self._sizes.pop(name, 0)
+            self._dirty.pop(name, None)
+            self._last_used.pop(name, None)
+
+    def _insert(self, name: str, tree, nb: int, dirty: bool) -> None:
+        """Admit ``name`` (lock held); caller has checked nb <= capacity."""
+        self._drop_stale(name)
+        self._evict_until_fits(nb)
+        self._cache[name] = tree
+        self._sizes[name] = nb
+        self._used += nb
+        self._dirty[name] = dirty
+        self._last_used[name] = time.time()
 
     def put(self, name: str, tree) -> None:
         with self._lock:
             nb = self._bytes(tree)
-            self._evict_until_fits(nb)
-            self._cache[name] = tree
-            self._cache.move_to_end(name)
-            self._sizes[name] = nb
-            self._dirty[name] = True
-            self._last_used[name] = time.time()
             self._gen[name] = self._gen.get(name, 0) + 1
+            if nb > self.capacity:
+                # oversized: would evict EVERYTHING and still not fit —
+                # bypass DRAM, persist straight to pmem (write-back now)
+                self._drop_stale(name)
+                self.store.put(f"dlm/{name}", tree)
+                self.bypasses += 1
+                return
+            self._insert(name, tree, nb, dirty=True)
+
+    def _read_through(self, name: str):
+        """Pmem read with buddy-replica fallback when the home store is
+        UNREACHABLE. A plain miss on a live pool (FileNotFoundError)
+        fails fast — fanning the fabric out for every never-written name
+        would multiply miss-path metadata traffic by node count."""
+        try:
+            return self.store.get(f"dlm/{name}")
+        except FileNotFoundError:
+            raise
+        except IOError:
+            if self.fallback_reader is None:
+                raise
+            return self.fallback_reader(name)
 
     def get(self, name: str):
         with self._lock:
@@ -107,13 +209,12 @@ class DLMCache:
                 self._last_used[name] = time.time()
                 return self._cache[name]
             self.misses += 1
-            tree = self.store.get(f"dlm/{name}")
+            tree = self._read_through(name)
             nb = self._bytes(tree)
-            self._evict_until_fits(nb)
-            self._cache[name] = tree
-            self._sizes[name] = nb
-            self._dirty[name] = False
-            self._last_used[name] = time.time()
+            if nb > self.capacity:
+                self.bypasses += 1  # serve uncached
+                return tree
+            self._insert(name, tree, nb, dirty=False)
             return tree
 
     def contains(self, name: str) -> bool:
@@ -135,18 +236,17 @@ class DLMCache:
                 self._last_used[name] = time.time()  # warm != cold
                 return True
             gen = self._gen.get(name, 0)
-        tree = self.store.get(f"dlm/{name}")
+        tree = self._read_through(name)
         with self._lock:
             # insert only if nobody touched the entry while we read pmem
             # (a concurrent put+evict would make our snapshot stale)
             if name not in self._cache and \
                     self._gen.get(name, 0) == gen:
                 nb = self._bytes(tree)
-                self._evict_until_fits(nb)
-                self._cache[name] = tree
-                self._sizes[name] = nb
-                self._dirty[name] = False
-                self._last_used[name] = time.time()
+                if nb > self.capacity:
+                    self.bypasses += 1  # warmed bytes stay in pmem only
+                else:
+                    self._insert(name, tree, nb, dirty=False)
             return False
 
     def evict_cold(self, max_idle_s: float = 0.0,
@@ -203,4 +303,5 @@ class TieredKVCache:
         return {"hits": self.cache.hits, "misses": self.cache.misses,
                 "evictions": self.cache.evictions,
                 "prefetches": self.cache.prefetches,
-                "prefetch_hits": self.cache.prefetch_hits}
+                "prefetch_hits": self.cache.prefetch_hits,
+                "bypasses": self.cache.bypasses}

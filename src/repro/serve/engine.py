@@ -66,17 +66,22 @@ class ServeEngine:
         return np.stack(out, axis=1)
 
     # ---- pmem spill (SLM): persist serving state, restore later ----
-    def spill(self, name: str, wait: bool = True):
+    def spill(self, name: str, wait: bool = True, replicate: bool = True):
         """Persist the session's KV/cursor to pmem and free DRAM. With a
         TieredIO engine attached the write happens off-thread; pass
-        ``wait=False`` to get the future instead of blocking."""
+        ``wait=False`` to get the future instead of blocking. With
+        ``replicate`` (default) the spilled state also gets a buddy-node
+        replica over the fabric, so ``resume``/``prefetch_sessions``
+        keep working when the home node's pool dies (the TieredIO DLM
+        cache transparently falls back to ``replica/<nid>/...``)."""
         assert self.tiered is not None or self.store is not None, \
             "no pmem backend attached"  # check BEFORE dropping the KV
         host = jax.tree.map(np.asarray, self.cache)
         obj = {"cache": host, "pos": np.int32(self.pos)}
         self.cache = None  # DRAM freed
         if self.tiered is not None:
-            fut = self.tiered.offload(f"serve/{name}", obj)
+            fut = self.tiered.offload(f"serve/{name}", obj,
+                                      replicate=replicate)
             if wait:
                 fut.result()
                 return None

@@ -38,6 +38,10 @@ class LoopState:
     losses: List[float] = field(default_factory=list)
     ckpt_seconds: List[float] = field(default_factory=list)
     recovered_at: List[int] = field(default_factory=list)
+    # acknowledged durability of the final checkpoint at shutdown
+    # ("LOCAL" / "REPLICATED" / "DRAINED"; None if no checkpoint ran) —
+    # a run report can now say what a node loss right after exit costs
+    final_ckpt_durability: Optional[str] = None
 
 
 def run(train_step_fn: Callable, params, opt_state,
@@ -49,6 +53,7 @@ def run(train_step_fn: Callable, params, opt_state,
     state = LoopState()
     sd = StragglerDetector()
     last_full = None
+    last_ticket = None
     for step, batch in enumerate(batches):
         t0 = time.time()
         params, opt_state, metrics = train_step_fn(params, opt_state, batch)
@@ -67,8 +72,9 @@ def run(train_step_fn: Callable, params, opt_state,
             host_state = {"params": jax.tree.map(np.asarray, params),
                           "opt": jax.tree.map(np.asarray, opt_state)}
             base = last_full if loop_cfg.delta_ckpt else None
-            cluster.tiered.save_async(step + 1, host_state, base_step=base,
-                                      drain=bool(loop_cfg.drain_every))
+            last_ticket = cluster.tiered.save_async(
+                step + 1, host_state, base_step=base,
+                drain=bool(loop_cfg.drain_every))
             if not loop_cfg.delta_ckpt or last_full is None:
                 last_full = step + 1
             # what the step pays: the submit (+ any slot backpressure)
@@ -96,4 +102,7 @@ def run(train_step_fn: Callable, params, opt_state,
     # all failed must not report success
     cluster.tiered.join()
     cluster.checkpointer.wait_async()
+    if last_ticket is not None:
+        # after the barrier this reflects the PERSISTED ack map
+        state.final_ckpt_durability = last_ticket.durability()
     return state

@@ -1,4 +1,6 @@
+import importlib.util
 import tempfile
+import threading
 from pathlib import Path
 
 import pytest
@@ -6,6 +8,41 @@ import pytest
 # NOTE: no XLA_FLAGS here by design — smoke tests must see the real (1)
 # device count. Multi-device distributed tests run in subprocesses
 # (tests/test_distributed.py) with their own device-count env.
+
+if importlib.util.find_spec("pytest_timeout") is None:
+    # Fallback for environments without the pytest-timeout plugin
+    # (requirements-dev installs it in CI): register the ini options so
+    # pytest.ini parses cleanly, and enforce the per-test budget with
+    # SIGALRM so a deadlocked worker still fails instead of hanging.
+    def pytest_addoption(parser):
+        parser.addini("timeout", "per-test timeout in seconds (fallback "
+                                 "shim; install pytest-timeout for the "
+                                 "real plugin)")
+        parser.addini("timeout_method", "ignored by the fallback shim "
+                                        "(SIGALRM only)")
+
+    @pytest.fixture(autouse=True)
+    def _fallback_timeout(request):
+        import signal
+        raw = request.config.getini("timeout")
+        secs = int(float(raw)) if raw else 0
+        if (secs <= 0 or not hasattr(signal, "SIGALRM")
+                or threading.current_thread()
+                is not threading.main_thread()):
+            yield
+            return
+
+        def _expire(signum, frame):
+            raise TimeoutError(
+                f"test exceeded the {secs}s per-test timeout "
+                f"(fallback SIGALRM enforcement)")
+        old = signal.signal(signal.SIGALRM, _expire)
+        signal.alarm(secs)
+        try:
+            yield
+        finally:
+            signal.alarm(0)
+            signal.signal(signal.SIGALRM, old)
 
 
 @pytest.fixture()

@@ -1,0 +1,440 @@
+"""Replica-acknowledged checkpoint durability: SaveTicket.durability()
+states, ack-ranked recovery (no store reads for ack-unrecoverable
+steps), the recovery matrix (death inside the commit->ack window, delta
+chains via buddy replicas, ack-map survival without node0), stale
+metadata resolution, and the DLM/SLM cache-accounting fixes."""
+import tempfile
+from concurrent.futures import Future
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+
+def _tree(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": r.randn(16, 8).astype(np.float32),
+            "b": r.randn(8).astype(np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# durability states + ack map
+# ---------------------------------------------------------------------------
+
+def test_durability_progression_to_replicated(cluster):
+    t = cluster.tiered.save_async(1, _tree(1))
+    t.result(timeout=30)
+    cluster.tiered.quiesce()  # replicas placed, acks recorded
+    assert t.durability() == "REPLICATED"
+    acks = cluster.checkpointer.acks(1)
+    ring = cluster.node_ids
+    for nid in ring:
+        rec = acks[nid]["replica"]
+        assert rec["target"] == cluster.checkpointer.buddy_of(nid, ring)
+        assert "ts" in rec
+
+
+def test_durability_progression_to_drained(cluster):
+    t = cluster.tiered.save_async(1, _tree(2), drain=True)
+    t.result(timeout=30)
+    cluster.tiered.quiesce()
+    assert t.durability() == "DRAINED"
+    acks = cluster.checkpointer.acks(1)
+    for nid in cluster.node_ids:
+        assert acks[nid]["drain"]["external"] == f"ckpt_step1_{nid}"
+
+
+def test_durability_stays_local_without_replication():
+    from repro.core.cluster import SimCluster
+    root = Path(tempfile.mkdtemp(prefix="repro_test_"))
+    c = SimCluster(root, n_nodes=4, buddy=False)
+    try:
+        t = c.tiered.save_async(1, _tree(3))
+        t.result(timeout=30)
+        c.tiered.quiesce()
+        assert t.durability() == "LOCAL"
+    finally:
+        c.shutdown()
+
+
+def test_durability_failed_commit(cluster):
+    def boom(*a, **k):
+        raise MemoryError("pmem full")
+    cluster.checkpointer.save = boom
+    t = cluster.tiered.save_async(1, _tree(0))
+    with pytest.raises(MemoryError):
+        t.result(timeout=30)
+    assert t.durability() == "FAILED"
+    cluster.tiered.quiesce()
+
+
+def test_failed_drain_keeps_step_replicated_not_drained(cluster):
+    def boom(name, tree):
+        raise IOError("external store died mid-drain")
+    cluster.external.put = boom
+    t = cluster.tiered.save_async(1, _tree(4), drain=True)
+    t.result(timeout=30)
+    errors = t.wait_post_commit(timeout=30)
+    assert errors and all("mid-drain" in str(e) for e in errors)
+    # replicas acked, drains not: durability honestly reports REPLICATED
+    assert t.durability() == "REPLICATED"
+    acks = cluster.checkpointer.acks(1)
+    assert all("drain" not in acks.get(n, {}) for n in cluster.node_ids)
+
+
+# ---------------------------------------------------------------------------
+# ack-ranked recovery (the acceptance criterion: no store reads for
+# steps the ack map already rules out)
+# ---------------------------------------------------------------------------
+
+def _record_store_reads(cluster):
+    """Wrap every store's object-read/probe entry points, recording the
+    object names touched. Metadata (pool JSON) reads stay unrecorded —
+    the ack ranking is ALLOWED to read manifests."""
+    reads = []
+
+    def wrap(st):
+        orig_get, orig_exists = st.get_with_manifest, st.exists
+
+        def get_with_manifest(name, *a, **k):
+            reads.append(name)
+            return orig_get(name, *a, **k)
+
+        def exists(name, *a, **k):
+            reads.append(name)
+            return orig_exists(name, *a, **k)
+        st.get_with_manifest, st.exists = get_with_manifest, exists
+
+    for st in cluster.stores.values():
+        wrap(st)
+    return reads
+
+
+def test_ack_skip_needs_no_store_reads(cluster):
+    """A step whose ack map shows the lost node unreplicated must be
+    skipped purely on metadata — not a single object-store read."""
+    c = cluster
+    c.tiered.save_async(1, _tree(1)).result(timeout=30)
+    c.tiered.quiesce()  # step 1 fully replicated + acked
+    # step 2: commit succeeds, but the node dies before any replica ack
+    # (emulated by a fabric that fails every replicate)
+
+    def dead_replicate(src, obj, dst, **kw):
+        f = Future()
+        f.set_exception(IOError("fabric down"))
+        return f
+    c.scheduler.replicate = dead_replicate
+    man2 = c.tiered.save_async(2, _tree(2)).result(timeout=30)
+    c.tiered.quiesce()
+    victim = c.node_ids[-1]
+    c.kill_node(victim)
+
+    reads = _record_store_reads(c)
+    out, man = c.checkpointer.restore_latest_recoverable(
+        lost_nodes=[victim])
+    assert man["step"] == 1
+    np.testing.assert_array_equal(out["w"], _tree(1)["w"])
+    assert c.checkpointer.last_restore_stats == \
+        {"skipped_by_ack": 1, "probed": 1}
+    slot2_obj = f"ckpt/slot{man2['slot']}"
+    assert not any(slot2_obj in name for name in reads), \
+        f"store reads touched the skipped step: {reads}"
+
+
+def test_probe_all_still_works_without_acks(cluster):
+    """use_acks=False preserves the old probe-everything walk (the
+    benchmark's baseline) and lands on the same answer."""
+    c = cluster
+    c.tiered.save_async(1, _tree(1)).result(timeout=30)
+    c.tiered.quiesce()
+    c.checkpointer.buddy = False  # step 2 gets no replicas, no acks
+    c.tiered.save_async(2, _tree(2)).result(timeout=30)
+    c.tiered.quiesce()
+    victim = c.node_ids[-1]
+    c.kill_node(victim)
+    out, man = c.checkpointer.restore_latest_recoverable(
+        lost_nodes=[victim], use_acks=False)
+    assert man["step"] == 1
+    assert c.checkpointer.last_restore_stats["probed"] == 2
+    assert c.checkpointer.last_restore_stats["skipped_by_ack"] == 0
+
+
+def test_replica_on_another_dead_node_is_skipped(cluster):
+    """An acked replica is useless if its TARGET died too: the ack
+    ranking must rule the step out without probing."""
+    c = cluster
+    c.tiered.save_async(1, _tree(1)).result(timeout=30)
+    c.tiered.quiesce()
+    ring = c.node_ids
+    victim = ring[-1]
+    buddy = c.checkpointer.buddy_of(victim, ring)  # holds victim's replica
+    with pytest.raises(IOError):
+        c.checkpointer.restore_latest_recoverable(
+            lost_nodes=[victim, buddy])
+    assert c.checkpointer.last_restore_stats["skipped_by_ack"] == 1
+    assert c.checkpointer.last_restore_stats["probed"] == 0
+
+
+def test_delta_chain_restore_via_buddy_replica(cluster_delta):
+    """Recovery matrix: a delta checkpoint restored for a lost node must
+    decode against the BASE's buddy replica as well."""
+    c = cluster_delta
+    base = _tree(5)
+    c.checkpointer.save(1, base)
+    t2 = {k: v + np.float32(1e-3) for k, v in base.items()}
+    c.checkpointer.save(2, t2, base_step=1)
+    c.checkpointer.wait_async()  # replicas + acks for both steps
+    victim = c.node_ids[-1]
+    c.kill_node(victim)
+    out, man = c.checkpointer.restore_latest_recoverable(
+        lost_nodes=[victim])
+    assert man["step"] == 2 and man["delta_base"] == 1
+    assert np.abs(out["w"] - t2["w"]).max() < 1e-4
+    assert c.checkpointer.last_restore_stats == \
+        {"skipped_by_ack": 0, "probed": 1}
+
+
+def test_delta_durability_capped_by_unreplicated_base(cluster_delta):
+    """A delta step is only as durable as its base chain: full replica
+    acks on the delta slot must not report REPLICATED when the base
+    never replicated, and the ack ranking must skip the whole chain."""
+    c = cluster_delta
+
+    def dead_replicate(src, obj, dst, **kw):
+        f = Future()
+        f.set_exception(IOError("fabric down"))
+        return f
+    orig = c.scheduler.replicate
+    c.scheduler.replicate = dead_replicate  # base replication dies
+    base = _tree(9)
+    c.tiered.save_async(1, base).result(timeout=30)
+    c.tiered.quiesce()
+    c.scheduler.replicate = orig  # fabric back for the delta save
+    t2 = c.tiered.save_async(
+        2, {k: v + np.float32(1e-3) for k, v in base.items()}, base_step=1)
+    t2.result(timeout=30)
+    c.tiered.quiesce()
+    # delta slot fully acked, but the chain is only locally durable
+    assert set(c.checkpointer.acks(2)) == set(c.node_ids)
+    assert t2.durability() == "LOCAL"
+    # ...and recovery rules out BOTH steps on metadata alone
+    victim = c.node_ids[-1]
+    c.kill_node(victim)
+    with pytest.raises(IOError):
+        c.checkpointer.restore_latest_recoverable(lost_nodes=[victim])
+    assert c.checkpointer.last_restore_stats == \
+        {"skipped_by_ack": 2, "probed": 0}
+
+
+def test_ack_map_survives_node0_loss(cluster):
+    """Acks are replicated with the manifests: losing node0 (the old
+    single meta store) must not forget which steps are durable."""
+    c = cluster
+    t = c.tiered.save_async(1, _tree(6))
+    t.result(timeout=30)
+    c.tiered.quiesce()
+    c.kill_node("node0")
+    acks = c.checkpointer.acks(1)
+    assert set(acks) == set(c.node_ids)  # all four acks still known
+    assert t.durability() == "REPLICATED"
+    out, man = c.checkpointer.restore_latest_recoverable(
+        lost_nodes=["node0"])
+    assert man["step"] == 1
+    np.testing.assert_array_equal(out["w"], _tree(6)["w"])
+    assert c.checkpointer.last_restore_stats == \
+        {"skipped_by_ack": 0, "probed": 1}
+
+
+# ---------------------------------------------------------------------------
+# satellite: stale metadata resolution
+# ---------------------------------------------------------------------------
+
+def test_stale_latest_on_rejoined_node_is_outvoted(cluster):
+    """A rejoined node0 carrying an old ckpt/latest.json must not shadow
+    the newer replicated pointer (fixed-node-order bug)."""
+    c = cluster
+    c.checkpointer.save(1, _tree(1))
+    c.checkpointer.save(2, _tree(2))
+    c.checkpointer.wait_async()
+    # node0 "rejoins" with a stale pointer from before its outage
+    c.pools["node0"].put_json("ckpt/latest.json", {"step": 1})
+    assert c.checkpointer.latest_step() == 2
+    out, man = c.checkpointer.restore()
+    assert man["step"] == 2
+
+
+# ---------------------------------------------------------------------------
+# satellite: raise_if_failed clears the raised error
+# ---------------------------------------------------------------------------
+
+def test_raise_if_failed_clears_after_raise(cluster):
+    c = cluster
+    orig = c.checkpointer.save
+
+    def boom(*a, **k):
+        raise MemoryError("pmem full")
+    c.checkpointer.save = boom
+    t = c.tiered.save_async(1, _tree(0))
+    with pytest.raises(MemoryError):
+        t.result(timeout=30)
+    with pytest.raises(MemoryError):
+        c.tiered.raise_if_failed()
+    # the error was popped: after recovery the engine is clean...
+    c.checkpointer.save = orig
+    c.tiered.raise_if_failed()  # must NOT re-raise the stale error
+    # ...and the next checkpoint boundary works normally
+    c.tiered.save_async(2, _tree(2)).result(timeout=30)
+    c.tiered.raise_if_failed()
+
+
+# ---------------------------------------------------------------------------
+# satellite: DLM cache accounting
+# ---------------------------------------------------------------------------
+
+def _obj(nbytes, seed=0):
+    return {"x": np.full(nbytes // 4, seed, np.float32)}
+
+
+def test_dlm_running_total_stays_exact(cluster):
+    from repro.core.tiering import DLMCache
+    cache = DLMCache(cluster.stores["node0"], capacity_bytes=4096)
+    for i in range(8):
+        cache.put(f"o{i}", _obj(1024, i))
+        assert cache.used_bytes() == sum(cache._sizes.values())
+        assert cache.used_bytes() <= cache.capacity
+    assert cache.evictions > 0
+    cache.put("o7", _obj(2048, 99))  # replace with a bigger body
+    assert cache.used_bytes() == sum(cache._sizes.values())
+    cache.evict_cold()
+    assert cache.used_bytes() == 0
+
+
+def test_dlm_oversized_put_bypasses_dram(cluster):
+    from repro.core.tiering import DLMCache
+    st = cluster.stores["node0"]
+    cache = DLMCache(st, capacity_bytes=1024)
+    cache.put("small", _obj(512, 1))
+    cache.put("huge", _obj(4096, 2))  # > capacity: must not be admitted
+    assert not cache.contains("huge")
+    assert cache.bypasses == 1
+    assert cache.used_bytes() <= cache.capacity
+    assert st.exists("dlm/huge")  # ...but it IS durable (write-through)
+    # the resident small object survived (no pointless full eviction)
+    assert cache.contains("small")
+    # demand read of the oversized object serves it uncached
+    out = cache.get("huge")
+    np.testing.assert_array_equal(out["x"], _obj(4096, 2)["x"])
+    assert not cache.contains("huge")
+    assert cache.used_bytes() <= cache.capacity
+
+
+# ---------------------------------------------------------------------------
+# satellite: SLM offload version guard
+# ---------------------------------------------------------------------------
+
+def test_slm_roundtrip_and_isolation(cluster):
+    from repro.core.tiering import SLMTier
+    st = cluster.stores["node0"]
+    a = SLMTier(st, "opt")
+    tree = {"m": np.arange(8, dtype=np.float32),
+            "v": np.ones(4, np.float32), "p": np.zeros(2, np.float32)}
+    resident, handle = a.offload(tree, ["m", "v"])
+    out = a.fetch(resident, handle)
+    np.testing.assert_array_equal(out["m"], tree["m"])
+    np.testing.assert_array_equal(out["v"], tree["v"])
+
+
+def test_slm_offload_survives_process_restart(cluster):
+    """The point of B-APM offload: a FRESH tier instance (new process)
+    must recover the leaves via the persisted head pointer."""
+    from repro.core.tiering import SLMTier
+    st = cluster.stores["node0"]
+    a = SLMTier(st, "opt")
+    tree = {"m": np.arange(8, dtype=np.float32)}
+    resident, handle = a.offload(tree, ["m"])
+    b = SLMTier(st, "opt")  # restarted process, no in-memory version
+    out = b.fetch(resident, handle)
+    np.testing.assert_array_equal(out["m"], tree["m"])
+
+
+def test_slm_fetch_before_offload_fails_loudly(cluster):
+    from repro.core.tiering import SLMTier
+    t = SLMTier(cluster.stores["node0"], "opt")
+    with pytest.raises(RuntimeError):
+        t.fetch({}, [])
+
+
+def test_slm_racing_offload_detected(cluster):
+    """Another tier instance overwriting our versioned object (or a
+    version-tag mismatch) must fail fetch, not silently merge."""
+    from repro.core.tiering import SLMTier
+    st = cluster.stores["node0"]
+    a = SLMTier(st, "opt")
+    tree_a = {"m": np.arange(8, dtype=np.float32)}
+    resident, handle = a.offload(tree_a, ["m"])
+    # a racing writer clobbers a's object at the SAME store version with
+    # a different tag — exactly the silent-merge hazard
+    st.put("slm/opt", {"m": np.zeros(8, np.float32)},
+           version=a._version, meta={"v": 12345})
+    with pytest.raises(IOError):
+        a.fetch(resident, handle)
+
+
+def test_slm_two_instances_stay_isolated(cluster):
+    from repro.core.tiering import SLMTier
+    st = cluster.stores["node0"]
+    a, b = SLMTier(st, "opt"), SLMTier(st, "opt")
+    tree_a = {"m": np.full(8, 1.0, np.float32)}
+    tree_b = {"m": np.full(8, 2.0, np.float32)}
+    res_a, h_a = a.offload(tree_a, ["m"])
+    res_b, h_b = b.offload(tree_b, ["m"])
+    out_b = b.fetch(res_b, h_b)
+    np.testing.assert_array_equal(out_b["m"], tree_b["m"])
+    # a's fetch either returns a's own (isolated) leaves or raises —
+    # never b's data merged silently
+    try:
+        out_a = a.fetch(res_a, h_a)
+        np.testing.assert_array_equal(out_a["m"], tree_a["m"])
+    except IOError:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# multi-node DLM: prefetch/fetch fall back to buddy replicas
+# ---------------------------------------------------------------------------
+
+def test_dlm_prefetch_falls_back_to_buddy_replica(cluster):
+    c = cluster
+    t = _tree(7)
+    c.tiered.offload("serve/sess", t).result(timeout=30)
+    c.tiered.quiesce()  # the buddy replica of dlm/serve/sess is placed
+    assert c.tiered.evict_cold() >= 1  # DRAM empty; pmem is the only copy
+    c.kill_node("node0")  # the DLM home node dies
+    res = c.tiered.prefetch(["serve/sess"]).result(timeout=30)
+    assert res == {"hits": 0, "loads": 1, "missing": 0}
+    out = c.tiered.fetch("serve/sess")
+    np.testing.assert_array_equal(out["w"], t["w"])
+
+
+def test_dlm_replica_lands_on_survivor_when_static_buddy_dead(cluster):
+    """Offload must pick the replica target from the LIVE ring: with the
+    home's static buddy dead, the replica lands on a survivor and reads
+    still work after the home dies too."""
+    c = cluster
+    c.kill_node("node1")  # node0's static ring buddy
+    t = _tree(8)
+    c.tiered.offload("serve/sess2", t).result(timeout=30)
+    c.tiered.quiesce()
+    assert c.stores["node2"].exists("replica/node0/dlm/serve/sess2")
+    c.tiered.evict_cold()
+    c.kill_node("node0")
+    out = c.tiered.fetch("serve/sess2")
+    np.testing.assert_array_equal(out["w"], t["w"])
+
+
+def test_dlm_missing_everywhere_still_advisory(cluster):
+    c = cluster
+    c.kill_node("node0")
+    res = c.tiered.prefetch(["serve/nope"]).result(timeout=30)
+    assert res == {"hits": 0, "loads": 0, "missing": 1}
+    c.tiered.join()  # nothing fatal recorded
