@@ -1,0 +1,183 @@
+"""Workflow data plane: in-situ dataset exchange vs external round-trip,
+and serial vs concurrent DAG makespan (paper §V-A, Fig. 8).
+
+Two claims measured:
+
+1. **Exchange**: a producer/consumer chain that hands datasets over
+   through the pmem-resident catalog (retain -> in-situ read) vs the
+   same chain round-tripping every hop through the external filesystem
+   (drain -> stage-in), the way separate applications share data
+   without a B-APM exchange. The external tier is bandwidth-throttled
+   to a parallel-filesystem share; the catalog hop never touches it.
+
+2. **Makespan**: a branching 8-job DAG (source -> 6 independent
+   branches -> sink) under the concurrent scheduler (ready jobs
+   dispatch onto per-node DataScheduler workers) vs the old serial
+   ``ready[0]`` walk (``max_concurrent=1``).
+
+``--smoke`` runs a seconds-scale variant and asserts both speedups —
+CI keeps the bench honest without paying full sizes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.core.cluster import SimCluster
+from repro.core.pmem import scratch_root
+from repro.core.workflow import JobSpec
+
+CHAIN = 4          # producer/consumer hops in the exchange chain
+BRANCHES = 6       # parallel middle jobs of the 8-job branching DAG
+
+
+def _payload(seed: int, size_mb: float):
+    n = max(1, int(size_mb * (1 << 20) // 4))
+    return {"x": np.random.RandomState(seed).randn(n).astype(np.float32)}
+
+
+def _chain_insitu(cluster, size_mb: float) -> float:
+    """One workflow; each hop retains its output in the catalog and the
+    next hop reads it in situ."""
+    def mk(i):
+        def fn(ctx):
+            prev = ctx.read(f"ins_x{i - 1}")["x"] if i else None
+            out = _payload(i, size_mb)["x"] if prev is None else prev + 1.0
+            return {f"ins_x{i}": {"x": out}}
+        return fn
+
+    jobs = [JobSpec(f"hop{i}", mk(i),
+                    inputs=(f"ins_x{i - 1}",) if i else (),
+                    after=(f"hop{i - 1}",) if i else (),
+                    retain=(f"ins_x{i}",))
+            for i in range(CHAIN)]
+    t0 = time.perf_counter()
+    cluster.workflows.run(jobs, workflow="bench_insitu")
+    return time.perf_counter() - t0
+
+
+def _chain_external(cluster, size_mb: float) -> float:
+    """Each hop is its OWN workflow (separate applications): the
+    producer drains its output to the external store, the consumer
+    burst-buffers it back in — the pre-B-APM filesystem round-trip."""
+    def mk(i):
+        def fn(ctx):
+            prev = ctx.read(f"ext_x{i - 1}")["x"] if i else None
+            out = _payload(i, size_mb)["x"] if prev is None else prev + 1.0
+            return {f"ext_x{i}": {"x": out}}
+        return fn
+
+    t0 = time.perf_counter()
+    for i in range(CHAIN):
+        cluster.workflows.run(
+            [JobSpec(f"hop{i}", mk(i),
+                     inputs=(f"ext_x{i - 1}",) if i else (),
+                     drain=(f"ext_x{i}",))],
+            workflow=f"bench_ext{i}")
+    return time.perf_counter() - t0
+
+
+def _branching_jobs(work_s: float):
+    def src(ctx):
+        return {"b_seed": {"x": np.arange(64.0)}}
+
+    def mk_branch(i):
+        def fn(ctx):
+            ctx.read("b_seed")
+            time.sleep(work_s)  # the branch's compute
+            return {f"b_part{i}": {"x": np.full(16, float(i))}}
+        return fn
+
+    def sink(ctx):
+        total = sum(ctx.read(f"b_part{i}")["x"].sum()
+                    for i in range(BRANCHES))
+        return {"b_total": {"s": np.array([total])}}
+
+    jobs = [JobSpec("src", src, retain=("b_seed",))]
+    jobs += [JobSpec(f"branch{i}", mk_branch(i), inputs=("b_seed",),
+                     after=("src",), retain=(f"b_part{i}",))
+             for i in range(BRANCHES)]
+    jobs.append(JobSpec("sink", sink,
+                        inputs=tuple(f"b_part{i}" for i in range(BRANCHES)),
+                        after=tuple(f"branch{i}" for i in range(BRANCHES)),
+                        retain=("b_total",)))
+    return jobs
+
+
+def _makespan(cluster, work_s: float, workflow: str,
+              max_concurrent=None, repeats: int = 2) -> float:
+    """Best-of-N makespan (the scheduler's floor, not the host's
+    jitter); every repeat re-verifies the sink's reduction."""
+    best = float("inf")
+    for r in range(repeats):
+        t0 = time.perf_counter()
+        cluster.workflows.run(_branching_jobs(work_s),
+                              workflow=f"{workflow}_{r}",
+                              max_concurrent=max_concurrent)
+        best = min(best, time.perf_counter() - t0)
+        total = cluster.catalog.get("b_total", f"{workflow}_{r}")["s"][0]
+        assert float(total) == sum(16.0 * i for i in range(BRANCHES)), total
+    return best
+
+
+def run(smoke: bool = False):
+    size_mb = 1.0 if smoke else 8.0
+    bandwidth = 30e6 if smoke else 150e6
+    work_s = 0.08 if smoke else 0.12
+
+    rows = []
+    c = SimCluster(scratch_root("bench_wf_"), n_nodes=4,
+                   external_bandwidth=bandwidth)
+    try:
+        t_ins = _chain_insitu(c, size_mb)
+        t_ext = _chain_external(c, size_mb)
+        rows.append(("workflow_exchange_in_situ", t_ins * 1e6,
+                     f"{CHAIN}_hops_{size_mb}MB_via_pmem_catalog"))
+        rows.append(("workflow_exchange_external", t_ext * 1e6,
+                     f"{CHAIN}_hops_{size_mb}MB_via_drain+stage_in"))
+        rows.append(("workflow_exchange_speedup", t_ext / t_ins,
+                     "x_faster_in_situ"))
+    finally:
+        c.shutdown()
+
+    c = SimCluster(scratch_root("bench_wf_"), n_nodes=4)
+    try:
+        t_serial = _makespan(c, work_s, "bench_serial", max_concurrent=1)
+        t_conc = _makespan(c, work_s, "bench_conc")
+        rows.append(("workflow_makespan_serial", t_serial * 1e6,
+                     f"{BRANCHES + 2}_jobs_ready0_walk"))
+        rows.append(("workflow_makespan_concurrent", t_conc * 1e6,
+                     f"{BRANCHES + 2}_jobs_parallel_dispatch"))
+        rows.append(("workflow_makespan_speedup", t_serial / t_conc,
+                     "x_faster_concurrent"))
+    finally:
+        c.shutdown()
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale run; asserts both speedups")
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    speedups = {}
+    for name, val, derived in rows:
+        print(f"{name},{val:.1f},{derived}")
+        if name.endswith("_speedup"):
+            speedups[name] = val
+    if args.smoke:
+        bad = {k: v for k, v in speedups.items() if v <= 1.05}
+        if bad:
+            print(f"SMOKE FAILURE: expected speedups > 1.05, got {bad}",
+                  file=sys.stderr)
+            sys.exit(1)
+        print("smoke ok: in-situ beats external, concurrent beats serial")
+
+
+if __name__ == "__main__":
+    main()

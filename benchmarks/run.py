@@ -18,7 +18,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_checkpoint, bench_io_scaling,
                             bench_kernels, bench_replication,
-                            bench_staging, bench_tiered_io, bench_tiering)
+                            bench_staging, bench_tiered_io, bench_tiering,
+                            bench_workflow)
     suites = {
         "io_scaling": bench_io_scaling.run,       # paper Table I
         "checkpoint": bench_checkpoint.run,       # async/delta claims (§V.8)
@@ -26,6 +27,7 @@ def main(argv=None) -> None:
         "tiering": bench_tiering.run,             # SLM/DLM modes (§II-B)
         "tiered_io": bench_tiered_io.run,         # unified engine (Fig. 4+8)
         "replication": bench_replication.run,     # ack-ranked recovery
+        "workflow": bench_workflow.run,           # dataset exchange (§V-A)
         "kernels": bench_kernels.run,
     }
     print("name,us_per_call,derived")

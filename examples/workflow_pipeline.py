@@ -1,6 +1,10 @@
-"""The paper's Fig. 8 workflow, end to end: data-prep -> train -> eval,
-sharing intermediates through node-local B-APM (zero external round-trips
-between stages).
+"""The paper's Fig. 8 workflow, end to end, over the Persistent Dataset
+Exchange: data-prep -> {train, corpus-stats} (concurrent branches) ->
+eval, sharing intermediates through node-local B-APM (zero external
+round-trips between stages). Every intermediate is a catalog dataset —
+versioned, lineage-stamped, replica-acked — so after killing a node the
+workflow resumes WITHOUT re-running jobs whose outputs survive on
+replicas.
 
     PYTHONPATH=src python examples/workflow_pipeline.py
 """
@@ -60,6 +64,14 @@ def main():
         print(f"  [train] loss {losses[0]:.3f} -> {losses[-1]:.3f}")
         return {"model": jax.tree.map(np.asarray, params)}
 
+    def stats(ctx):
+        # independent analysis branch: runs CONCURRENTLY with train
+        shard = ctx.read("train_set")
+        tok = np.asarray(shard["tokens"] if isinstance(shard, dict)
+                         and "tokens" in shard else shard)
+        return {"corpus_stats": {"mean": np.array([float(tok.mean())]),
+                                 "max": np.array([float(tok.max())])}}
+
     def evaluate(ctx):
         params = jax.tree.map(jax.numpy.asarray, ctx.read("model"))
         batch = ctx.read("eval_batch")
@@ -67,17 +79,46 @@ def main():
         print(f"  [eval] in-situ eval loss {loss:.3f}")
         return {"eval_report": {"loss": np.array([loss])}}
 
-    cluster.workflows.run([
+    jobs = [
         JobSpec("prep", prep, inputs=("raw_corpus",),
                 retain=("train_set", "eval_batch")),
         JobSpec("train", train, inputs=("train_set",), after=("prep",),
                 retain=("model",)),
+        JobSpec("stats", stats, inputs=("train_set",), after=("prep",),
+                retain=("corpus_stats",)),
         JobSpec("eval", evaluate, inputs=("model", "eval_batch"),
-                after=("train",), drain=("eval_report",)),
-    ])
-    print("\nworkflow event log (paper Fig. 8 sequence):")
+                after=("train",), drain=("eval_report",), retain=("eval_report",)),
+    ]
+    res = cluster.workflows.run(jobs, workflow="pipeline")
+
+    print("\nworkflow event log (paper Fig. 8 sequence, concurrent):")
     for ts_, kind, detail in cluster.workflows.events:
         print(f"  {kind:9s} {detail}")
+
+    print("\nlineage of eval_report (catalog records, digests persisted):")
+    for rec in cluster.catalog.lineage("eval_report", "pipeline"):
+        if "external" in rec:
+            print(f"  <- external:{rec['external']}")
+        else:
+            print(f"  {rec['name']}@v{rec['version']} "
+                  f"produced by {rec['lineage']['job']} "
+                  f"on {rec['home']} digest={rec['digest']}")
+
+    # node loss: every retained dataset has an acked replica, so resume
+    # replays NOTHING — consumers read the surviving replica copies
+    cluster.tiered.quiesce()  # replica acks land
+    victim = cluster.catalog.record("model", "pipeline")["home"]
+    cluster.kill_node(victim)
+    res2 = cluster.workflows.resume(jobs, "pipeline",
+                                    lost_nodes=[victim])
+    print(f"\nafter killing {victim}: resume skipped "
+          f"{sorted(res2.skipped)} (outputs ack-recoverable), "
+          f"replayed {res2.replayed}")
+    cluster.tiered.evict_cold(0.0)  # drop DRAM residency: force pmem path
+    cluster.catalog.get("model", "pipeline")  # home dead -> replica read
+    print(f"  model served from replica "
+          f"({cluster.catalog.stats['replica_reads']} replica reads)")
+
     cluster.workflows.cleanup(keep=())
     cluster.shutdown()
 

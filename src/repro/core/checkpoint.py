@@ -373,20 +373,56 @@ class DistributedCheckpointer:
             out[path + ".__ds"] = scale
         return out
 
-    def _decode_delta(self, nid, payload, base_step, manifest,
-                      via_replica: bool = False):
+    def _drained_payload(self, nid: str, step: int):
+        """The external drained copy of ``nid``'s shard at ``step`` —
+        the last-resort recovery tier, consulted ONLY when the recorded
+        drain ack says it exists (no blind external probes). Returns
+        None when there is no usable ack/external copy. The external
+        name carries the step, so identity is pinned by construction
+        (the drain task's expect_meta verified it at drain time)."""
+        if self.external is None:
+            return None
+        rec = self.acks(step).get(nid, {}).get("drain")
+        if not rec:
+            return None
+        ext = rec.get("external") or f"ckpt_step{step}_{nid}"
+        try:
+            return self.external.get(ext)
+        except (IOError, OSError, FileNotFoundError):
+            return None
+
+    def _base_tree(self, nid: str, base_step: int,
+                   lost_nodes: Sequence[str] = ()):
+        """A delta chain's base payload for ``nid``, walking the same
+        recovery tiers as the shard itself: node-local slot, then the
+        buddy replica (placed within the ring the BASE manifest was
+        saved under), then the ack-recorded external drained copy."""
         base_man = self._meta_get_json(
             f"ckpt/manifest_step{base_step}.json")
         base_name = f"ckpt/slot{base_man['slot']}"
-        store = self.stores[nid]
-        if via_replica:
-            # replicas were placed on the buddy within the ring the BASE
-            # manifest was saved under, not today's full node list
-            base_ring = base_man.get("nodes") or self.nodes
-            store = self.stores[self.buddy_of(nid, base_ring)]
-            base_name = f"replica/{nid}/{base_name}"
-        self._check_slot_step(store, base_name, base_step)
-        base = store.get(base_name)
+        if nid not in lost_nodes:
+            self._check_slot_step(self.stores[nid], base_name, base_step)
+            return self.stores[nid].get(base_name)
+        base_ring = base_man.get("nodes") or self.nodes
+        buddy = self.buddy_of(nid, base_ring)
+        rep = f"replica/{nid}/{base_name}"
+        if buddy not in lost_nodes:
+            try:
+                if self.stores[buddy].exists(rep):
+                    self._check_slot_step(self.stores[buddy], rep,
+                                          base_step)
+                    return self.stores[buddy].get(rep)
+            except IOError:
+                pass  # buddy pool unreadable too — try the drain tier
+        drained = self._drained_payload(nid, base_step)
+        if drained is not None:
+            return drained
+        raise IOError(f"no readable base (step {base_step}) for {nid}: "
+                      f"pmem lost, replica lost, no drain ack")
+
+    def _decode_delta(self, nid, payload, base_step, manifest,
+                      lost_nodes: Sequence[str] = ()):
+        base = self._base_tree(nid, base_step, lost_nodes)
         base_leaves = dict(_flatten(base))
         out = {}
         for path, arr in payload.items():
@@ -467,9 +503,11 @@ class DistributedCheckpointer:
         """Metadata-only recoverability check — ONE small JSON read:
         every lost node that held shards at ``step`` (i.e. was in the
         save ring the ack record captured) must have an acknowledged
-        replica on a surviving node. Steps without an ack record
-        (pre-ack saves, or the record lost with its pools) stay
-        plausible — the probing restore is then the arbiter."""
+        replica on a surviving node, OR an acknowledged drain to the
+        external store (the drain tier survives any pmem loss). Steps
+        without an ack record (pre-ack saves, or the record lost with
+        its pools) stay plausible — the probing restore is then the
+        arbiter."""
         try:
             rec_map = self._meta_get_json(self._ack_name(step))
         except (IOError, FileNotFoundError):
@@ -479,6 +517,8 @@ class DistributedCheckpointer:
         for nid in lost_nodes:
             if nid not in ring:
                 continue  # held no shards at this step
+            if acks.get(nid, {}).get("drain") and self.external is not None:
+                continue  # external drained copy outlives any pmem loss
             rec = acks.get(nid, {}).get("replica")
             if not rec:
                 return False  # died between commit and replica ack
@@ -518,28 +558,48 @@ class DistributedCheckpointer:
         ring = manifest.get("nodes") or self.nodes
         cache: Dict[str, Dict[str, np.ndarray]] = {}
 
+        def pmem_part(nid: str):
+            """The shard from pmem (own slot, or buddy replica for a
+            lost node); None when both copies are gone — the caller
+            then consults the drain tier."""
+            src, name = nid, obj
+            if nid in lost_nodes:
+                src = self.buddy_of(nid, ring)
+                name = f"replica/{nid}/{obj}"
+                try:
+                    if src in lost_nodes or \
+                            not self.stores[src].exists(name):
+                        return None
+                except IOError:
+                    return None  # buddy pool died too
+            # CRC-verified read + step check against the SAME object
+            # manifest: torn or reused-slot data fails here rather
+            # than reassembling a mixed-step tree
+            tree_part, obj_man = self.stores[src].get_with_manifest(name)
+            got = obj_man.get("meta", {}).get("step")
+            if got != step:
+                raise IOError(f"{name} holds step {got}, wanted "
+                              f"{step} (slot reused)")
+            return tree_part
+
         def node_payload(nid: str) -> Dict[str, np.ndarray]:
             if nid not in cache:
-                src, name = nid, obj
-                if nid in lost_nodes:
-                    src = self.buddy_of(nid, ring)
-                    name = f"replica/{nid}/{obj}"
-                    if not self.stores[src].exists(name):
-                        raise IOError(f"no replica of {nid} on {src}")
-                # CRC-verified read + step check against the SAME object
-                # manifest: torn or reused-slot data fails here rather
-                # than reassembling a mixed-step tree
-                tree_part, obj_man = self.stores[src].get_with_manifest(
-                    name)
-                got = obj_man.get("meta", {}).get("step")
-                if got != step:
-                    raise IOError(f"{name} holds step {got}, wanted "
-                                  f"{step} (slot reused)")
+                tree_part = pmem_part(nid)
+                if tree_part is None:
+                    # drain-tier recovery: shard AND replica died — the
+                    # recorded drain ack says an external copy exists
+                    # (never probed blindly)
+                    tree_part = self._drained_payload(nid, step)
+                    if tree_part is None:
+                        raise IOError(
+                            f"no replica of {nid} on "
+                            f"{self.buddy_of(nid, ring)} and no "
+                            f"acknowledged drain for step {step}")
                 payload = dict(_flatten(tree_part))
                 if manifest.get("delta_base") is not None and self.delta:
                     payload = self._decode_delta(
                         nid, payload, manifest["delta_base"], manifest,
-                        via_replica=(nid in lost_nodes))
+                        lost_nodes=lost_nodes)
                 cache[nid] = payload
             return cache[nid]
 

@@ -12,6 +12,7 @@ from typing import Dict, Optional
 
 from repro.core.checkpoint import DistributedCheckpointer
 from repro.core.data_scheduler import DataScheduler, ExternalStore
+from repro.core.dataset_exchange import DatasetCatalog
 from repro.core.object_store import DistributedStore, PMemObjectStore
 from repro.core.pmem import PMemPool
 from repro.core.resilience import FailureRecovery, Heartbeat
@@ -48,8 +49,14 @@ class SimCluster:
         self.tiered = TieredIO(self.checkpointer, self.scheduler, self.dlm)
         self.recovery = FailureRecovery(self.checkpointer, self.heartbeat,
                                         tiered=self.tiered)
+        # the persistent dataset exchange: catalog replication rides the
+        # TieredIO exchange channel, leased datasets pin the DLM cache
+        self.catalog = DatasetCatalog(self.stores)
+        self.tiered.attach_catalog(self.catalog)
         self.workflows = WorkflowScheduler(self.stores, self.scheduler,
-                                           self.external)
+                                           self.external,
+                                           tiered=self.tiered,
+                                           catalog=self.catalog)
 
     def kill_node(self, nid: str) -> None:
         """Simulate a node failure: its pmem becomes unreachable."""

@@ -228,6 +228,14 @@ class DataScheduler:
             return man
         return self._submit(src, go, priority)
 
+    def run_job(self, nid: str, fn: Callable, priority: int = 3) -> Future:
+        """Compute channel: run a workflow job body on node ``nid``'s
+        worker. Jobs ride the same priority queues as data movement
+        (movement outranks them) and the same work stealing, so ready
+        jobs placed on different nodes genuinely run concurrently while
+        an overloaded node's backlog can drain elsewhere."""
+        return self._submit(nid, fn, priority)
+
     def queue_depth(self, nid: str) -> int:
         return self.queues[nid].qsize()
 

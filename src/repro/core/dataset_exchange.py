@@ -1,0 +1,527 @@
+"""Persistent Dataset Exchange: a pmem-resident dataset catalog (§V-A).
+
+The paper's differentiating B-APM scenario is cross-application data
+sharing: a producer leaves a dataset in node-local persistent memory and
+consumers map it in place, skipping the external-filesystem round-trip
+(Fig. 8 "retain"). Bare ``store.put`` calls give you the bytes but none
+of the contract — no lifetime, no lineage, no way to know after a node
+loss whether the bytes still exist anywhere. ``DatasetCatalog`` supplies
+that contract:
+
+  * every shared object is a named, versioned **Dataset** whose catalog
+    record (small JSON, replicated to every live pool like checkpoint
+    manifests) persists name, version, producing job, workflow id, the
+    input dataset versions it was derived from, a content digest, byte
+    size, and the placement map (home node + acked buddy replica);
+  * consumers **acquire leases**; the refcount is the set of unexpired
+    leases. ``gc()`` reclaims pmem bytes only for datasets that are
+    unretained AND lease-free — replacing the blanket end-of-workflow
+    scrub. Reclaim keeps the record (minus bytes): lineage queries
+    survive garbage collection;
+  * placement stays durable across node loss: ``publish`` registers a
+    buddy replica through the TieredIO exchange channel, whose ack is
+    recorded into the catalog record the moment the transfer is durable.
+    ``recoverable(name, lost_nodes)`` then answers "does this dataset
+    survive losing those nodes?" from the record alone — zero
+    object-store probes, mirroring ``restore_latest_recoverable``;
+  * reads fall back to the acked replica (``replica/<home>/<obj>``)
+    when the home pool is dead, and admit the tree into the DLM cache
+    (when attached) so repeat consumers hit DRAM.
+
+Record schema (``exch/<workflow>/<name>@v<version>.json``):
+
+  {"name", "workflow", "version", "object", "home", "nbytes", "digest",
+   "ts", "retained": bool, "reclaimed": bool,
+   "lineage": {"job": producing job, "workflow": wf id,
+               "inputs": [[name, workflow, version] | ["__external__",
+                          external name, 0], ...]},
+   "leases": {lease_id: {"owner", "expires", "ts"}},
+   "acks":   {"replica": {"target", "ts"}}}
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.object_store import PMemObjectStore, content_digest
+
+#: lineage marker for inputs that came from outside the catalog
+EXTERNAL_INPUT = "__external__"
+
+DEFAULT_LEASE_TTL_S = 300.0
+
+
+@dataclass
+class Lease:
+    """One consumer's hold on a dataset version. The dataset's bytes
+    cannot be reclaimed while any unexpired lease exists."""
+    lease_id: str
+    name: str
+    workflow: str
+    version: int
+    owner: str
+    expires: float
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        return (now if now is not None else time.time()) >= self.expires
+
+
+def _rec_name(workflow: str, name: str, version: int) -> str:
+    return f"exch/{workflow}/{name}@v{version}.json"
+
+
+def live_pools(stores: Dict[str, PMemObjectStore],
+               nodes: Sequence[str]) -> List[str]:
+    """Nodes whose pmem is reachable (all of them when none are —
+    let the writes themselves surface the outage)."""
+    live = [n for n in nodes
+            if getattr(stores[n].pool, "alive", True)]
+    return list(live or nodes)
+
+
+def put_json_all_pools(stores: Dict[str, PMemObjectStore],
+                       nodes: Sequence[str], name: str, obj: dict) -> int:
+    """Replicate a small metadata record to every live pool (the same
+    discipline as checkpoint manifests) — shared by catalog records and
+    workflow journals. Returns the number of pools written; raises when
+    none were reachable."""
+    wrote = 0
+    for nid in live_pools(stores, nodes):
+        try:
+            stores[nid].pool.put_json(name, obj)
+            wrote += 1
+        except IOError:
+            continue
+    if not wrote:
+        raise IOError(f"no reachable pool for metadata {name}")
+    return wrote
+
+
+def read_json_copies(stores: Dict[str, PMemObjectStore],
+                     nodes: Sequence[str], name: str) -> List[dict]:
+    """All readable pool copies of a replicated record (callers merge
+    with their own semantics). Raises the last error when none read."""
+    copies: List[dict] = []
+    err: Optional[Exception] = None
+    for nid in nodes:
+        try:
+            copies.append(stores[nid].pool.get_json(name))
+        except (IOError, FileNotFoundError) as e:
+            err = e
+    if not copies:
+        raise err if err is not None else FileNotFoundError(name)
+    return copies
+
+
+def cache_key(workflow: str, name: str, version: int) -> str:
+    """DLM-cache key for a dataset version (lease-aware eviction keys)."""
+    return f"exch/{workflow}/{name}@v{version}"
+
+
+class DatasetCatalog:
+    """Pmem-resident catalog of named, versioned, leased datasets."""
+
+    def __init__(self, stores: Dict[str, PMemObjectStore],
+                 exchange=None, cache=None):
+        self.stores = stores
+        self.nodes = sorted(stores)
+        # TieredIO ExchangeChannel (replica fan-out with acks); attached
+        # by TieredIO.attach_catalog, or left None for standalone use
+        self.exchange = exchange
+        self.cache = cache  # DLMCache: read path admits, leases pin
+        self._lock = threading.Lock()  # serialises record read-merge-write
+        self._lease_seq = itertools.count(1)
+        self._leases: Dict[str, Lease] = {}  # issued by THIS process
+        self._version_cache: Dict[Tuple[str, str], int] = {}
+        # write-through record cache: every mutation in this process
+        # goes through _put_json_all under _lock, so the cached copy IS
+        # the merged state — record() skips 4 pool reads per lookup. A
+        # fresh process (resume after crash) starts cold and reads the
+        # replicated pool copies. Callers treat records as read-only.
+        self._rec_cache: Dict[str, dict] = {}
+        self.stats = {"published": 0, "reclaimed": 0, "replica_reads": 0}
+
+    # ---- replicated record I/O (same discipline as checkpoint meta) ---
+    def _live(self) -> List[str]:
+        return live_pools(self.stores, self.nodes)
+
+    def _put_json_all(self, name: str, obj: dict) -> None:
+        put_json_all_pools(self.stores, self.nodes, name, obj)
+        self._rec_cache[name] = obj
+
+    def _get_json_merged(self, name: str) -> dict:
+        """Union a record across pools: newest ``ts`` wins the scalar
+        fields; ``leases`` and ``acks`` are merged (an ack recorded while
+        some pool was down exists only on the pools live at ack time).
+        Served from the write-through cache when this process authored
+        the last write."""
+        cached = self._rec_cache.get(name)
+        if cached is not None:
+            return cached
+        copies = read_json_copies(self.stores, self.nodes, name)
+        best = dict(max(copies, key=lambda c: c.get("ts", 0)))
+        leases: Dict[str, dict] = {}
+        acks: Dict[str, dict] = {}
+        for c in copies:
+            for lid, rec in (c.get("leases") or {}).items():
+                if lid not in leases or \
+                        rec.get("ts", 0) > leases[lid].get("ts", 0):
+                    leases[lid] = rec
+            for kind, rec in (c.get("acks") or {}).items():
+                if kind not in acks or \
+                        rec.get("ts", 0) > acks[kind].get("ts", 0):
+                    acks[kind] = rec
+        # reclaim is terminal: a stale unreclaimed copy on a pool that
+        # missed the GC write must not resurrect the bytes' record
+        best["reclaimed"] = any(c.get("reclaimed") for c in copies)
+        best["leases"], best["acks"] = leases, acks
+        return best
+
+    # ---- versions -----------------------------------------------------
+    def versions(self, name: str, workflow: str) -> List[int]:
+        """All published versions of (workflow, name), ascending."""
+        prefix = f"exch/{workflow}/"
+        out: Set[int] = set()
+        tag = f"{name}@v"
+        for nid in self.nodes:
+            pool = self.stores[nid].pool
+            if not getattr(pool, "alive", True):
+                continue
+            for f in pool.list(prefix):
+                base = f[len(prefix):]
+                if base.startswith(tag) and base.endswith(".json"):
+                    out.add(int(base[len(tag):-len(".json")]))
+        return sorted(out)
+
+    def latest_version(self, name: str, workflow: str) -> Optional[int]:
+        # publishes in this process keep the cache current; a cold
+        # process (resume) falls through to the replicated pool records
+        v = self._version_cache.get((workflow, name))
+        if v is not None:
+            return v
+        vs = self.versions(name, workflow)
+        if vs:
+            self._version_cache[(workflow, name)] = vs[-1]
+        return vs[-1] if vs else None
+
+    def exists(self, name: str, workflow: str) -> bool:
+        """A record exists for (workflow, name) — including reclaimed
+        ones (records outlive bytes). Use ``available`` to ask whether
+        the BYTES of the latest version are still held."""
+        return self.latest_version(name, workflow) is not None
+
+    def available(self, name: str, workflow: str) -> bool:
+        """The latest version's bytes are still held (not reclaimed) —
+        the readiness check for consumers; a reclaimed dataset must fall
+        back to whatever external/raw copy the caller knows about."""
+        try:
+            return not self.record(name, workflow).get("reclaimed")
+        except (KeyError, IOError, FileNotFoundError):
+            return False
+
+    # ---- publish ------------------------------------------------------
+    def publish(self, name: str, tree, *, workflow: str = "default",
+                producer: Optional[str] = None,
+                inputs: Sequence[Sequence] = (),
+                node: Optional[str] = None, retained: bool = True,
+                replicate: bool = True) -> dict:
+        """Write a new version of ``name``: bytes to the home node's
+        store, record to every live pool, buddy replica (acked) through
+        the exchange channel. ``inputs`` are lineage refs —
+        ``(name, workflow, version)`` tuples or ``(EXTERNAL_INPUT,
+        external_name, 0)``. Returns the catalog record."""
+        with self._lock:
+            key = (workflow, name)
+            v = self._version_cache.get(key)
+            if v is None:
+                v = self.latest_version(name, workflow) or 0
+            v += 1
+            self._version_cache[key] = v
+        live = self._live()
+        home = node if node in live else live[0]
+        obj = f"wf/{workflow}/{name}"
+        man = self.stores[home].put(
+            obj, tree, version=v,
+            meta={"dataset": name, "workflow": workflow, "version": v})
+        rec = {
+            "name": name, "workflow": workflow, "version": v,
+            "object": obj, "home": home, "nbytes": man["nbytes"],
+            "digest": content_digest(man), "ts": time.time(),
+            "retained": bool(retained), "reclaimed": False,
+            "lineage": {"job": producer, "workflow": workflow,
+                        "inputs": [list(ref) for ref in inputs]},
+            "leases": {}, "acks": {},
+        }
+        self._put_json_all(_rec_name(workflow, name, v), rec)
+        self.stats["published"] += 1
+        if replicate and self.exchange is not None and len(live) > 1:
+            ring = live
+            buddy = ring[(ring.index(home) + 1) % len(ring)]
+            self.exchange.submit(
+                home, obj, buddy, version=v,
+                expect_meta={"dataset": name, "version": v},
+                on_ack=self._ack_recorder(workflow, name, v, buddy))
+        return rec
+
+    def _ack_recorder(self, workflow: str, name: str, version: int,
+                      target: str):
+        def record(_result) -> None:
+            self._update_record(
+                workflow, name, version,
+                lambda rec: rec["acks"].update(
+                    {"replica": {"target": target, "ts": time.time()}}))
+        return record
+
+    def _update_record(self, workflow: str, name: str, version: int,
+                       mutate) -> dict:
+        """Serialised read-merge-mutate-write of one record across all
+        live pools (same discipline as checkpoint ack records)."""
+        rname = _rec_name(workflow, name, version)
+        with self._lock:
+            old = self._get_json_merged(rname)
+            # mutate a copy and swap: readers holding the previous dict
+            # keep a consistent snapshot (no mutate-while-iterate races)
+            rec = {**old, "leases": dict(old.get("leases") or {}),
+                   "acks": dict(old.get("acks") or {})}
+            mutate(rec)
+            # every update advances ts: the cross-pool merge's "newest
+            # copy wins" rule must see an updated copy as newer than a
+            # stale one a briefly-unreachable pool kept
+            rec["ts"] = time.time()
+            self._put_json_all(rname, rec)
+            return rec
+
+    # ---- read path ----------------------------------------------------
+    def record(self, name: str, workflow: str = "default",
+               version: Optional[int] = None) -> dict:
+        if version is None:
+            version = self.latest_version(name, workflow)
+            if version is None:
+                raise KeyError(f"dataset {workflow}/{name}: never published")
+        return self._get_json_merged(_rec_name(workflow, name, version))
+
+    def get(self, name: str, workflow: str = "default",
+            version: Optional[int] = None):
+        """Read a dataset version: DLM cache, then home pmem, then the
+        acked buddy replica (then any node holding one) when the home
+        pool is dead or lost the object."""
+        rec = self.record(name, workflow, version)
+        if rec.get("reclaimed"):
+            raise KeyError(f"dataset {workflow}/{name}@v{rec['version']} "
+                           f"was reclaimed (lease expired, refcount zero)")
+        ckey = cache_key(workflow, name, rec["version"])
+        if self.cache is not None:
+            hit = self.cache.peek(ckey)
+            if hit is not None:
+                return hit
+        tree = self._read_object(rec)
+        if self.cache is not None:
+            self.cache.admit(ckey, tree)
+        return tree
+
+    def _read_object(self, rec: dict):
+        v, obj, home = rec["version"], rec["object"], rec["home"]
+        try:
+            if self.stores[home].exists(obj, v):
+                return self.stores[home].get(obj, v)
+        except IOError:
+            pass  # home pool dead — fall through to replicas
+        rep = f"replica/{home}/{obj}"
+        target = (rec.get("acks") or {}).get("replica", {}).get("target")
+        order = ([target] if target else []) + \
+            [n for n in self.nodes if n != home]
+        seen: Set[str] = set()
+        last: Optional[Exception] = None
+        for nid in order:
+            if nid is None or nid in seen or nid == home:
+                continue
+            seen.add(nid)
+            try:
+                if self.stores[nid].exists(rep, v):
+                    self.stats["replica_reads"] += 1
+                    return self.stores[nid].get(rep, v)
+            except IOError as e:
+                last = e
+        raise KeyError(
+            f"dataset {rec['workflow']}/{rec['name']}@v{v}: home {home} "
+            f"unreadable and no replica found") from last
+
+    # ---- recoverability (metadata only — the resume contract) ---------
+    def recoverable(self, name: str, workflow: str = "default",
+                    version: Optional[int] = None,
+                    lost_nodes: Sequence[str] = ()) -> bool:
+        """Would this dataset survive losing ``lost_nodes``? Decided from
+        the catalog record's placement + replica ack alone — ZERO
+        object-store probes (``WorkflowScheduler.resume`` ranks whole
+        workflows with this, mirroring ``restore_latest_recoverable``)."""
+        try:
+            rec = self.record(name, workflow, version)
+        except (KeyError, IOError, FileNotFoundError):
+            return False
+        if rec.get("reclaimed"):
+            return False
+        if rec["home"] not in lost_nodes:
+            return True
+        ack = (rec.get("acks") or {}).get("replica")
+        return bool(ack and ack.get("target") not in lost_nodes)
+
+    # ---- leases / refcount / GC --------------------------------------
+    def acquire(self, name: str, *, workflow: str = "default",
+                version: Optional[int] = None, owner: str = "anon",
+                ttl_s: float = DEFAULT_LEASE_TTL_S) -> Lease:
+        """Take a lease on a dataset version; GC cannot reclaim its bytes
+        until every lease is released or expired."""
+        rec = self.record(name, workflow, version)
+        if rec.get("reclaimed"):
+            raise KeyError(f"dataset {workflow}/{name}@v{rec['version']} "
+                           f"already reclaimed")
+        v = rec["version"]
+        lid = f"{owner}-{next(self._lease_seq)}"
+        lease = Lease(lid, name, workflow, v, owner, time.time() + ttl_s)
+
+        def add(r: dict) -> None:
+            # re-checked under the record lock: a GC that won the race
+            # and marked the record reclaimed must refuse the lease
+            if r.get("reclaimed"):
+                raise KeyError(f"dataset {workflow}/{name}@v{v} "
+                               f"already reclaimed")
+            r["leases"][lid] = {"owner": owner, "expires": lease.expires,
+                                "ts": time.time()}
+
+        self._update_record(workflow, name, v, add)
+        self._leases[lid] = lease
+        return lease
+
+    def release(self, lease: Lease) -> None:
+        self._leases.pop(lease.lease_id, None)
+        try:
+            self._update_record(
+                lease.workflow, lease.name, lease.version,
+                lambda r: r["leases"].pop(lease.lease_id, None))
+        except (IOError, FileNotFoundError):
+            pass  # record unreachable — expiry reclaims it eventually
+
+    def refcount(self, name: str, workflow: str = "default",
+                 version: Optional[int] = None,
+                 now: Optional[float] = None) -> int:
+        """Number of unexpired leases on the dataset version."""
+        rec = self.record(name, workflow, version)
+        now = now if now is not None else time.time()
+        return sum(1 for l in (rec.get("leases") or {}).values()
+                   if l.get("expires", 0) > now)
+
+    def unretain(self, name: str, workflow: str = "default",
+                 version: Optional[int] = None) -> None:
+        """Drop producer retention: the dataset becomes reclaimable as
+        soon as its refcount reaches zero."""
+        rec = self.record(name, workflow, version)
+        self._update_record(workflow, name, rec["version"],
+                            lambda r: r.update({"retained": False}))
+
+    def leased_cache_keys(self, now: Optional[float] = None) -> Set[str]:
+        """DLM-cache keys of datasets this process holds live leases on
+        (TieredIO's lease-aware eviction keeps these DRAM-resident)."""
+        now = now if now is not None else time.time()
+        return {cache_key(l.workflow, l.name, l.version)
+                for l in self._leases.values() if not l.expired(now)}
+
+    def records(self, workflow: Optional[str] = None) -> List[dict]:
+        """All catalog records (optionally one workflow's), merged."""
+        names: Set[str] = set()
+        prefix = f"exch/{workflow}/" if workflow else "exch/"
+        for nid in self.nodes:
+            pool = self.stores[nid].pool
+            if not getattr(pool, "alive", True):
+                continue
+            names.update(f for f in pool.list(prefix)
+                         if f.endswith(".json"))
+        return [self._get_json_merged(n) for n in sorted(names)]
+
+    def gc(self, now: Optional[float] = None) -> List[Tuple[str, str, int]]:
+        """Reclaim pmem bytes of every dataset that is unretained AND has
+        no unexpired lease. Expired leases are dropped; the record stays
+        (marked ``reclaimed``) so lineage survives the bytes. Returns
+        the reclaimed ``(workflow, name, version)`` triples.
+
+        The decision runs inside the record's locked read-mutate-write
+        against the CURRENT copy (not the scan snapshot), and the
+        terminal ``reclaimed`` mark lands BEFORE any bytes are deleted —
+        a lease acquired concurrently either lands first (and defers
+        reclaim) or sees ``reclaimed`` and is refused; it is never
+        silently destroyed."""
+        now = now if now is not None else time.time()
+        reclaimed: List[Tuple[str, str, int]] = []
+        for rec in self.records():
+            if rec.get("reclaimed"):
+                continue
+            decision: Dict[str, bool] = {}
+
+            def decide(r: dict, decision=decision) -> None:
+                live = {lid: l for lid, l in
+                        (r.get("leases") or {}).items()
+                        if l.get("expires", 0) > now}
+                r["leases"] = live  # prune expired against current copy
+                if not r.get("retained") and not live \
+                        and not r.get("reclaimed"):
+                    r["reclaimed"] = True
+                    decision["reclaim"] = True
+
+            try:
+                self._update_record(rec["workflow"], rec["name"],
+                                    rec["version"], decide)
+            except (IOError, FileNotFoundError):
+                continue  # record unreachable right now — next sweep
+            if decision.get("reclaim"):
+                self._delete_bytes(rec)
+                reclaimed.append(
+                    (rec["workflow"], rec["name"], rec["version"]))
+                self.stats["reclaimed"] += 1
+        return reclaimed
+
+    def _delete_bytes(self, rec: dict) -> None:
+        v, obj, home = rec["version"], rec["object"], rec["home"]
+        for nid, name in [(home, obj)] + \
+                [(n, f"replica/{home}/{obj}") for n in self.nodes
+                 if n != home]:
+            try:
+                if self.stores[nid].exists(name, v):
+                    self.stores[nid].delete(name, v)
+            except IOError:
+                continue  # dead pool: its bytes died with it
+        if self.cache is not None:
+            self.cache.drop(cache_key(rec["workflow"], rec["name"], v))
+
+    # ---- lineage ------------------------------------------------------
+    def lineage(self, name: str, workflow: str = "default",
+                version: Optional[int] = None) -> List[dict]:
+        """The transitive derivation chain of a dataset version, root
+        inputs last: each entry is the catalog record (which persists
+        producing job, workflow, input versions and content digest).
+        External inputs appear as ``{"external": <name>}`` markers.
+        Works on reclaimed datasets too — records outlive bytes."""
+        out: List[dict] = []
+        seen: Set[Tuple[str, str, int]] = set()
+        queue: List[Tuple[str, str, Optional[int]]] = [
+            (name, workflow, version)]
+        while queue:
+            n, wf, v = queue.pop(0)
+            try:
+                rec = self.record(n, wf, v)
+            except (KeyError, FileNotFoundError):
+                continue
+            key = (rec["workflow"], rec["name"], rec["version"])
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(rec)
+            for ref in rec["lineage"]["inputs"]:
+                if ref and ref[0] == EXTERNAL_INPUT:
+                    marker = {"external": ref[1]}
+                    if marker not in out:
+                        out.append(marker)
+                elif ref:
+                    queue.append((ref[0], ref[1], ref[2]))
+        return out

@@ -34,6 +34,19 @@ def _flatten(tree, prefix="") -> List[Tuple[str, np.ndarray]]:
     return out
 
 
+def content_digest(manifest: dict) -> str:
+    """Content digest of an object from its manifest alone: the CRC32 of
+    the sorted per-leaf ``path:crc`` pairs. Identical trees produce
+    identical digests without re-reading a byte of data — the dataset
+    exchange stamps this into lineage records so derived datasets can be
+    audited against their recorded inputs."""
+    acc = 0
+    for path in sorted(manifest.get("leaves", {})):
+        ent = manifest["leaves"][path]
+        acc = zlib.crc32(f"{path}:{ent['crc']}".encode(), acc)
+    return f"{acc & 0xFFFFFFFF:08x}"
+
+
 def _unflatten(leaves: Dict[str, np.ndarray]):
     tree: Dict[str, Any] = {}
     for path, v in leaves.items():
@@ -124,6 +137,11 @@ class PMemObjectStore:
                            n_rows * row_bytes, dtype=dtype,
                            shape=(n_rows,) + shape[1:]).copy()
 
+    def nbytes_of(self, name: str, version: int = 0) -> int:
+        """Object size from the manifest alone (no data reads) — feeds
+        byte-weighted workflow placement."""
+        return int(self.manifest(name, version).get("nbytes", 0))
+
     def delete(self, name: str, version: int = 0) -> None:
         self.pool.delete(f"objects/{name}@v{version}.manifest")
         self.pool.delete(f"objects/{name}@v{version}.data")
@@ -154,3 +172,13 @@ class DistributedStore:
             raise KeyError(f"{name}@v{version} not on any node")
         nid = prefer if prefer in nodes else nodes[0]
         return self.stores[nid].get(name, version)
+
+    def nbytes_of(self, name: str, version: int = 0) -> int:
+        """Size of an object wherever it lives (0 when nowhere): the
+        byte-weighted placement input for raw (non-catalog) objects."""
+        for nid in self.locate(name, version):
+            try:
+                return self.stores[nid].nbytes_of(name, version)
+            except (IOError, FileNotFoundError):
+                continue
+        return 0

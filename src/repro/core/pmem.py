@@ -15,12 +15,25 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import threading
 import time
 from pathlib import Path
 from typing import Dict, Iterator, Optional
 
 import numpy as np
+
+
+def scratch_root(prefix: str = "repro_pmem_") -> Path:
+    """A fresh scratch directory for pmem-pool emulation, preferring
+    DRAM-backed tmpfs (/dev/shm). B-APM latencies sit next to DRAM's;
+    on a container whose default tmp lives on a slow 9p/overlay disk,
+    per-commit fsyncs would otherwise cost ~10ms each and dominate any
+    benchmark of the pmem data plane."""
+    base = Path("/dev/shm")
+    if base.is_dir() and os.access(base, os.W_OK):
+        return Path(tempfile.mkdtemp(prefix=prefix, dir=str(base)))
+    return Path(tempfile.mkdtemp(prefix=prefix))
 
 
 class PMemRegion:
@@ -64,6 +77,7 @@ class PMemPool:
         self.node_id = node_id
         self.capacity_bytes = capacity_bytes
         self.root.mkdir(parents=True, exist_ok=True)
+        self._root_norm = os.path.normpath(str(self.root))
         self._open: Dict[str, PMemRegion] = {}
         self._lock = threading.RLock()
         self._dead = False
@@ -84,9 +98,12 @@ class PMemPool:
             raise IOError(f"pmem pool {self.node_id} unreachable")
 
     def _path(self, name: str) -> Path:
-        p = (self.root / name).resolve()
-        assert str(p).startswith(str(self.root.resolve())), name
-        return p
+        # lexical containment check (normpath collapses any ".."): a
+        # resolve() here costs a realpath syscall chain per metadata
+        # access, which dominates small-object traffic on slow mounts
+        p = os.path.normpath(os.path.join(self._root_norm, name))
+        assert p.startswith(self._root_norm + os.sep), name
+        return Path(p)
 
     def create(self, name: str, nbytes: int) -> PMemRegion:
         with self._lock:
@@ -126,21 +143,31 @@ class PMemPool:
     def list(self, prefix: str = "") -> Iterator[str]:
         if self._dead:
             return
+        # walk only the directory component of the prefix — a catalog
+        # listing of exch/<wf>/ must not stat every checkpoint slot
         base = self.root
-        for p in sorted(base.rglob("*")):
-            if p.is_file():
-                rel = str(p.relative_to(base))
+        dir_part = prefix.rpartition("/")[0]
+        if dir_part:
+            base = self.root / dir_part
+            if not base.is_dir():
+                return
+        names = []
+        for dirpath, _dirs, files in os.walk(base):
+            rel_dir = os.path.relpath(dirpath, self.root)
+            for f in files:
+                rel = f if rel_dir == "." else f"{rel_dir}/{f}"
                 if rel.startswith(prefix):
-                    yield rel
+                    names.append(rel)
+        yield from sorted(names)
 
     def used_bytes(self) -> int:
         total = 0
-        for p in self.root.rglob("*"):
-            try:
-                if p.is_file():
-                    total += p.stat().st_size
-            except OSError:
-                continue  # e.g. a .tmp committed (renamed) mid-scan
+        for dirpath, _dirs, files in os.walk(self.root):
+            for f in files:
+                try:
+                    total += os.stat(os.path.join(dirpath, f)).st_size
+                except OSError:
+                    continue  # e.g. a .tmp committed (renamed) mid-scan
         return total
 
     # ---- small atomic metadata (manifests) ----

@@ -218,6 +218,32 @@ class ReplicationChannel:
         return record
 
 
+class ExchangeChannel:
+    """Dataset replica fan-out with per-dataset acks — the dataset
+    exchange's sibling of ``ReplicationChannel``. One ``submit`` per
+    published dataset version: the home node's object is copied to a
+    buddy through the data scheduler, and ``on_ack`` (the catalog's
+    record updater) runs inside the task the moment the replica is
+    durable. A failed or superseded transfer records nothing — the
+    catalog's placement map under-promises durability, never
+    over-promises it. TieredIO tracks the futures so ``quiesce``/``join``
+    cover in-flight dataset replication alongside checkpoints."""
+
+    def __init__(self, scheduler: DataScheduler, track=None):
+        self.scheduler = scheduler
+        self._track = track  # TieredIO future-tracking hook
+
+    def submit(self, src: str, obj: str, dst: str, *, version: int = 0,
+               expect_meta: Optional[dict] = None,
+               on_ack=None) -> Future:
+        fut = self.scheduler.replicate(src, obj, dst, version=version,
+                                       expect_meta=expect_meta,
+                                       on_complete=on_ack)
+        if self._track is not None:
+            self._track(fut)
+        return fut
+
+
 class TieredIO:
     """Async engine over checkpointer + scheduler + DLM cache."""
 
@@ -234,6 +260,12 @@ class TieredIO:
         if checkpointer is not None and scheduler is not None:
             self.replication = ReplicationChannel(checkpointer, scheduler)
             checkpointer.replication = self.replication
+        # dataset-exchange fan-out (catalog attached via attach_catalog)
+        self.exchange: Optional[ExchangeChannel] = None
+        self.catalog = None
+        if scheduler is not None:
+            self.exchange = ExchangeChannel(scheduler,
+                                            track=self._track_future)
         # home node of the DLM cache (whose store it fronts): replica
         # fallback reads resolve relative to it
         self._home_nid: Optional[str] = None
@@ -268,6 +300,21 @@ class TieredIO:
 
     def _submit(self, fn) -> Future:
         return self._io.submit(fn)  # raises RuntimeError after shutdown
+
+    def _track_future(self, fut: Future) -> None:
+        with self._lock:
+            self._prune_done_locked()
+            self._futures.append(fut)
+
+    def attach_catalog(self, catalog) -> None:
+        """Wire a DatasetCatalog into the engine: its replica fan-out
+        goes through the exchange channel (futures joined by quiesce),
+        its reads admit into the DLM cache, and ``evict_cold`` keeps the
+        catalog's actively-leased datasets DRAM-resident."""
+        self.catalog = catalog
+        catalog.exchange = self.exchange
+        if self.cache is not None:
+            catalog.cache = self.cache
 
     # ---- checkpoint channel ------------------------------------------
     def save_async(self, step: int, tree, *,
@@ -481,10 +528,47 @@ class TieredIO:
         return fut
 
     def evict_cold(self, max_idle_s: float = 0.0) -> int:
-        """Spill idle DRAM entries back to pmem; returns count evicted."""
+        """Spill idle DRAM entries back to pmem; returns count evicted.
+        Lease-aware: datasets the attached catalog holds live leases on
+        are pinned (a consumer mid-lease never loses DRAM residency)."""
         if self.cache is None:
             return 0
-        return self.cache.evict_cold(max_idle_s)
+        keep = (self.catalog.leased_cache_keys()
+                if self.catalog is not None else ())
+        return self.cache.evict_cold(max_idle_s, keep=keep)
+
+    def prefetch_datasets(self, refs, workflow: str = "default") -> Future:
+        """Anticipatory dataset warm-up through the catalog: resolve each
+        named dataset (home pmem or acked replica) on the read pool and
+        admit it into the DLM cache, so a consumer job's first ``read``
+        hits DRAM. Same advisory contract as ``prefetch``: absent or
+        reclaimed datasets are counted, never raised."""
+        assert self.catalog is not None, "no catalog attached"
+        refs = list(refs)
+
+        def _warm():
+            hits = loads = missing = 0
+            from repro.core.dataset_exchange import cache_key
+            for name in refs:
+                try:
+                    rec = self.catalog.record(name, workflow)
+                    key = cache_key(workflow, name, rec["version"])
+                    if self.cache is not None and self.cache.contains(key):
+                        hits += 1
+                        continue
+                    self.catalog.get(name, workflow)
+                    loads += 1
+                except (KeyError, IOError, FileNotFoundError):
+                    missing += 1
+            self.stats["prefetch_hits"] += hits
+            self.stats["prefetch_loads"] += loads
+            return {"hits": hits, "loads": loads, "missing": missing}
+
+        fut = self._read.submit(_warm)
+        with self._lock:
+            self._prune_done_locked()
+            self._futures.append(fut)
+        return fut
 
     # ---- burst-buffer channel (external -> pmem) ---------------------
     def stage_in(self, nid: str, names: Sequence[str],

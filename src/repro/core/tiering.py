@@ -15,7 +15,8 @@ import collections
 import random
 import threading
 import time
-from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+from typing import (Any, Callable, Container, Dict, Iterable, List,
+                    Optional, Tuple)
 
 import numpy as np
 
@@ -221,6 +222,38 @@ class DLMCache:
         with self._lock:
             return name in self._cache
 
+    def admit(self, name: str, tree) -> None:
+        """Insert a CLEAN entry loaded by an external reader (the
+        dataset-exchange read path): cached for reuse and simply dropped
+        at eviction — never written back to ``dlm/``, since the reader
+        owns the persistent copy. Oversized trees bypass DRAM."""
+        with self._lock:
+            nb = self._bytes(tree)
+            self._gen[name] = self._gen.get(name, 0) + 1
+            if nb > self.capacity:
+                self.bypasses += 1
+                return
+            self._insert(name, tree, nb, dirty=False)
+
+    def peek(self, name: str):
+        """The cached entry or None — no read-through (the caller owns
+        the miss path, e.g. the catalog's home/replica resolution)."""
+        with self._lock:
+            if name in self._cache:
+                self.hits += 1
+                self._cache.move_to_end(name)
+                self._last_used[name] = time.time()
+                return self._cache[name]
+            self.misses += 1
+            return None
+
+    def drop(self, name: str) -> None:
+        """Forget an entry without write-back (its backing object was
+        reclaimed — writing back would resurrect deleted bytes)."""
+        with self._lock:
+            self._gen[name] = self._gen.get(name, 0) + 1
+            self._drop_stale(name)
+
     def prefetch(self, name: str) -> bool:
         """Warm ``name`` into DRAM without counting toward hit/miss demand
         stats. Returns True when the entry was already resident (a
@@ -250,14 +283,18 @@ class DLMCache:
             return False
 
     def evict_cold(self, max_idle_s: float = 0.0,
-                   now: Optional[float] = None) -> int:
+                   now: Optional[float] = None,
+                   keep: Container[str] = ()) -> int:
         """Spill entries idle for > ``max_idle_s`` back to pmem and drop
         them from DRAM (write-back for dirty ones). Returns the number of
-        entries evicted. ``max_idle_s=0`` evicts everything."""
+        entries evicted. ``max_idle_s=0`` evicts everything. Names in
+        ``keep`` are never evicted — TieredIO passes the catalog's
+        actively-leased dataset keys here, so a consumer mid-lease keeps
+        its working set DRAM-resident across cold sweeps."""
         now = now if now is not None else time.time()
         with self._lock:
             cold = [n for n, ts in self._last_used.items()
-                    if now - ts >= max_idle_s]
+                    if now - ts >= max_idle_s and n not in keep]
             for name in cold:
                 self._evict_one(name)
             return len(cold)

@@ -1,29 +1,64 @@
-"""Workflow-aware job scheduling with pmem data retention (paper §V-A, §VI).
+"""Workflow scheduling over the Persistent Dataset Exchange (§V-A, §VI).
 
-A workflow is a DAG of jobs. The scheduler implements the paper's Fig. 8
-sequence: allocate nodes -> set memory mode -> stage inputs into node pmem
-(burst buffer) -> launch -> leave retained outputs in pmem for dependent
-jobs (in-situ sharing, no external round-trip) -> drain final outputs ->
-clean up pmem (data security: nothing survives unless retained).
+A workflow is a DAG of jobs, executed through the paper's Fig. 8
+sequence: allocate nodes -> stage inputs into node pmem (burst buffer)
+-> launch -> leave retained outputs in pmem for dependent jobs (in-situ
+sharing, no external round-trip) -> drain final outputs -> reclaim.
+This scheduler runs that sequence CONCURRENTLY and RECOVERABLY:
 
-Placement is data-affine: a job preferentially lands on nodes already
-holding the largest share of its inputs.
+  * every ready job dispatches onto a ``DataScheduler`` worker the
+    moment its inputs are staged — independent branches of the DAG (and
+    independent workflows, each under its own namespace) genuinely
+    overlap instead of the old ``ready[0]`` serial walk;
+  * placement is data-affine BY BYTES: a job lands on the node holding
+    the largest share of its input bytes (catalog manifests for
+    datasets, store manifests for raw objects), tie-broken toward the
+    least-loaded node so input-free jobs spread out;
+  * all intermediates go through the ``DatasetCatalog``: versioned,
+    lineage-stamped, replica-acked, lease-protected. ``cleanup`` is the
+    catalog's refcount/lease GC, not a blanket scrub;
+  * progress persists in a **workflow journal**
+    (``wf/<id>/journal.json``, replicated to every live pool like
+    checkpoint manifests). After a node loss, ``resume`` replays ONLY
+    the jobs whose retained outputs the catalog's replica acks mark
+    unrecoverable — completed jobs with surviving bytes (home or acked
+    replica) are never re-invoked, and the decision reads zero objects,
+    mirroring ``restore_latest_recoverable``;
+  * final-output drains are joined at the end of ``run``: a failed
+    drain fails the workflow (``SupersededError`` stays benign).
+
+Journal schema (``wf/<id>/journal.json``):
+
+  {"workflow": id, "ts": last write, "status": running|done|failed,
+   "jobs": {job: {"status": "done", "nodes": [...],
+                  "outputs": {name: version}, "retained": [names],
+                  "drain": [names], "ts": ...}}}
 """
 from __future__ import annotations
 
+import itertools
+import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
-from repro.core.data_scheduler import DataScheduler, ExternalStore
+from repro.core.data_scheduler import (DataScheduler, ExternalStore,
+                                       SupersededError)
+from repro.core.dataset_exchange import (DatasetCatalog, EXTERNAL_INPUT,
+                                         Lease, live_pools,
+                                         put_json_all_pools,
+                                         read_json_copies)
 from repro.core.object_store import DistributedStore, PMemObjectStore
+
+#: default lease TTL for a job's hold on its inputs while it runs
+JOB_LEASE_TTL_S = 600.0
 
 
 @dataclass
 class JobSpec:
     name: str
     fn: Callable[["JobContext"], Dict[str, Any]]
-    inputs: Tuple[str, ...] = ()        # object names (from deps or external)
+    inputs: Tuple[str, ...] = ()        # dataset names (from deps or external)
     after: Tuple[str, ...] = ()         # job-name dependencies
     retain: Tuple[str, ...] = ()        # outputs kept in pmem for deps
     drain: Tuple[str, ...] = ()         # outputs drained to external at end
@@ -37,84 +72,440 @@ class JobContext:
     nodes: List[str]
     stores: Dict[str, PMemObjectStore]
     view: DistributedStore
+    workflow: str = "default"
+    catalog: Optional[DatasetCatalog] = None
+    external: Optional[ExternalStore] = None
 
-    def read(self, name: str):
+    def read(self, name: str, workflow: Optional[str] = None):
+        """Resolve an input: catalog dataset (this workflow's namespace,
+        or an explicit cross-workflow import), then raw pmem object
+        (staged external input / pre-placed data)."""
+        wf = workflow or self.workflow
+        if self.catalog is not None and self.catalog.available(name, wf):
+            try:
+                return self.catalog.get(name, wf)
+            except KeyError:
+                pass  # reclaimed under us — fall back to raw pmem
         return self.view.get(name, prefer=self.nodes[0])
+
+
+class WorkflowResult(dict):
+    """``run``'s return value: job name -> outputs dict, plus the
+    workflow id and (after ``resume``) the skipped/replayed split."""
+
+    def __init__(self, workflow_id: str):
+        super().__init__()
+        self.workflow_id = workflow_id
+        self.skipped: List[str] = []    # done jobs NOT re-invoked
+        self.replayed: List[str] = []   # jobs re-run because outputs lost
 
 
 class WorkflowScheduler:
     def __init__(self, stores: Dict[str, PMemObjectStore],
-                 scheduler: DataScheduler, external: ExternalStore):
+                 scheduler: DataScheduler, external: ExternalStore,
+                 tiered=None, catalog: Optional[DatasetCatalog] = None):
         self.stores = stores
         self.nodes = sorted(stores)
         self.dsched = scheduler
         self.external = external
+        self.tiered = tiered
+        self.catalog = catalog if catalog is not None \
+            else DatasetCatalog(stores)
         self.view = DistributedStore(stores)
         self.events: List[Tuple[float, str, str]] = []  # (ts, kind, detail)
-        self._retained: Dict[str, str] = {}  # object -> producing job
+        self._ev_lock = threading.Lock()
+        self._lock = threading.Lock()
+        self._wf_seq = itertools.count()
+        self._node_load: Dict[str, int] = {n: 0 for n in self.nodes}
+        self._staged: Set[Tuple[str, str]] = set()   # (node, object name)
+        self._workflows: Set[str] = set()            # namespaces run here
 
     def _log(self, kind: str, detail: str) -> None:
-        self.events.append((time.time(), kind, detail))
+        with self._ev_lock:
+            self.events.append((time.time(), kind, detail))
 
-    # ---- placement: data affinity ----
-    def _place(self, job: JobSpec) -> List[str]:
-        score = {n: 0 for n in self.nodes}
+    # ---- journal (replicated like checkpoint manifests) --------------
+    @staticmethod
+    def _journal_name(wf: str) -> str:
+        return f"wf/{wf}/journal.json"
+
+    def _live(self) -> List[str]:
+        return live_pools(self.stores, self.nodes)
+
+    def _journal_put(self, wf: str, journal: dict) -> None:
+        journal["ts"] = time.time()
+        put_json_all_pools(self.stores, self.nodes,
+                           self._journal_name(wf), journal)
+
+    def journal(self, wf: str) -> dict:
+        """The workflow journal merged across surviving pools: per-job
+        entries union'd, newest ``ts`` per job wins (a journal write
+        while some pool was down exists only on the pools live then)."""
+        copies = read_json_copies(self.stores, self.nodes,
+                                  self._journal_name(wf))
+        best = dict(max(copies, key=lambda c: c.get("ts", 0)))
+        jobs: Dict[str, dict] = {}
+        for c in copies:
+            for jname, e in (c.get("jobs") or {}).items():
+                if jname not in jobs or \
+                        e.get("ts", 0) > jobs[jname].get("ts", 0):
+                    jobs[jname] = e
+        best["jobs"] = jobs
+        return best
+
+    # ---- placement: byte-weighted data affinity ----------------------
+    def _place(self, job: JobSpec, wf: str) -> List[str]:
+        """Nodes holding the largest share of the job's input BYTES
+        (dataset sizes from catalog records, raw objects from store
+        manifests — not input count), tie-broken toward the node with
+        the fewest jobs in flight so input-free jobs spread out."""
+        live = self._live()
+        score: Dict[str, int] = {n: 0 for n in live}
         for obj in job.inputs:
-            for n in self.view.locate(obj):
-                score[n] += 1
-        ranked = sorted(self.nodes, key=lambda n: -score[n])
+            try:
+                rec = self.catalog.record(obj, wf)
+            except (KeyError, IOError, FileNotFoundError):
+                rec = None
+            if rec is not None and not rec.get("reclaimed"):
+                nb = max(int(rec.get("nbytes", 0)), 1)
+                home = rec.get("home")
+                target = (rec.get("acks") or {}) \
+                    .get("replica", {}).get("target")
+                if home in score:
+                    score[home] += nb
+                elif target in score:  # home died: affinity follows replica
+                    score[target] += nb
+                continue
+            for nid in self.view.locate(obj):
+                if nid in score:
+                    try:
+                        score[nid] += max(
+                            self.stores[nid].nbytes_of(obj), 1)
+                    except (IOError, FileNotFoundError):
+                        score[nid] += 1
+        with self._lock:
+            load = dict(self._node_load)
+        ranked = sorted(live,
+                        key=lambda n: (-score[n], load.get(n, 0), n))
         return ranked[:job.n_nodes]
 
-    # ---- Fig. 8 lifecycle ----
-    def run(self, jobs: Sequence[JobSpec]) -> Dict[str, Dict[str, Any]]:
-        by_name = {j.name: j for j in jobs}
-        done: Dict[str, Dict[str, Any]] = {}
-        pending = list(jobs)
-        while pending:
-            ready = [j for j in pending if all(a in done for a in j.after)]
-            if not ready:
-                raise RuntimeError("workflow deadlock (cyclic deps?)")
-            job = ready[0]
-            pending.remove(job)
-            nodes = self._place(job)                       # (2) allocate
-            self._log("allocate", f"{job.name} -> {nodes} "
-                      f"mode={job.memory_mode}")
-            # (3) stage-in: burst-buffer any inputs not already in pmem
-            futs = []
-            for obj in job.inputs:
-                if not self.view.locate(obj):
-                    if not self.external.exists(obj):
-                        raise KeyError(f"input {obj} nowhere to be found")
-                    futs.append(self.dsched.stage_in(nodes[0], obj, obj))
-                    self._log("stage_in", f"{obj} -> {nodes[0]}")
-                else:
-                    self._log("in_situ", f"{obj} already in pmem "
-                              f"(retained by {self._retained.get(obj)})")
-            for f in futs:
-                f.result()
-            # (4-7) run the job
-            ctx = JobContext(job, nodes, self.stores, self.view)
-            self._log("launch", job.name)
+    # ---- stage-in through TieredIO -----------------------------------
+    def _stage_inputs(self, job: JobSpec, nodes: List[str],
+                      wf: str) -> List:
+        futs: List = []
+        warm: List[str] = []
+        for obj in job.inputs:
+            if self.catalog.available(obj, wf):
+                try:
+                    producer = self.catalog.record(obj, wf)["lineage"]["job"]
+                except (KeyError, IOError, FileNotFoundError):
+                    producer = None
+                self._log("in_situ", f"{wf}:{obj} in catalog "
+                          f"(produced by {producer})")
+                warm.append(obj)
+                continue
+            if self.view.locate(obj):
+                self._log("in_situ", f"{obj} already in pmem")
+                continue
+            if not self.external.exists(obj):
+                raise KeyError(f"input {obj} nowhere to be found")
+            if self.tiered is not None:
+                futs.extend(self.tiered.stage_in(nodes[0], [obj],
+                                                 prefix=""))
+            else:
+                futs.append(self.dsched.stage_in(nodes[0], obj, obj))
+            self._staged.add((nodes[0], obj))
+            self._log("stage_in", f"{obj} -> {nodes[0]}")
+        if warm and job.memory_mode == "dlm" and self.tiered is not None \
+                and self.tiered.catalog is self.catalog:
+            # DLM-mode job: warm the DRAM cache with its catalog inputs
+            # so the first read hits DRAM, not pmem
+            futs.append(self.tiered.prefetch_datasets(warm, wf))
+            self._log("prefetch", f"{wf}:{','.join(warm)} -> dlm cache")
+        return futs
+
+    # ---- job body (runs on a DataScheduler worker) -------------------
+    def _make_task(self, job: JobSpec, nodes: List[str], wf: str,
+                   lineage: List[List]):
+        def task():
+            ctx = JobContext(job, nodes, self.stores, self.view,
+                             workflow=wf, catalog=self.catalog,
+                             external=self.external)
             outputs = job.fn(ctx) or {}
-            done[job.name] = outputs
-            # retained outputs stay in pmem (spread across the job's nodes)
+            versions: Dict[str, int] = {}
+            # outputs spread across the job's nodes; every one becomes a
+            # catalog dataset (versioned + lineage-stamped + replicated)
             for i, (name, tree) in enumerate(sorted(outputs.items())):
                 node = nodes[i % len(nodes)]
-                self.stores[node].put(name, tree)
+                retained = name in job.retain or name in job.drain
+                rec = self.catalog.publish(
+                    name, tree, workflow=wf, producer=job.name,
+                    inputs=lineage, node=node, retained=retained)
+                versions[name] = rec["version"]
                 if name in job.retain:
-                    self._retained[name] = job.name
-                    self._log("retain", f"{name} on {node}")
-            # (8) drain requested outputs to the external store (async)
-            for name in job.drain:
-                src = self.view.locate(name)[0]
-                self.dsched.drain(src, name, name)
-                self._log("drain", f"{name} {src} -> external")
-        return done
+                    self._log("retain", f"{wf}:{name}@v{rec['version']} "
+                              f"on {rec['home']}")
+            return outputs, versions
+        return task
 
+    def _lineage_refs(self, job: JobSpec, wf: str,
+                      leases: List[Lease]) -> List[List]:
+        refs = [[l.name, l.workflow, l.version] for l in leases]
+        leased = {l.name for l in leases}
+        refs += [[EXTERNAL_INPUT, obj, 0] for obj in job.inputs
+                 if obj not in leased]
+        return refs
+
+    # ---- Fig. 8 lifecycle, concurrent -------------------------------
+    def run(self, jobs: Sequence[JobSpec], *,
+            workflow: Optional[str] = None,
+            max_concurrent: Optional[int] = None,
+            _pre_done: Optional[Dict[str, dict]] = None) -> WorkflowResult:
+        """Execute the DAG: every job whose dependencies are done (and
+        inputs staged) dispatches onto a DataScheduler worker; jobs on
+        different nodes run concurrently. ``max_concurrent=1`` recovers
+        the old serial walk (bench_workflow.py measures the gap).
+        Multiple ``run`` calls may execute concurrently — each workflow
+        is namespaced and journaled independently."""
+        wf = workflow if workflow is not None \
+            else f"wf{next(self._wf_seq)}"
+        with self._lock:
+            self._workflows.add(wf)
+        by_name = {j.name: j for j in jobs}
+        if len(by_name) != len(jobs):
+            raise ValueError("duplicate job names in workflow")
+        result = WorkflowResult(wf)
+        journal = {"workflow": wf, "status": "running", "jobs": {}}
+        for jname, entry in (_pre_done or {}).items():
+            journal["jobs"][jname] = entry
+            result[jname] = {}  # outputs live in the catalog, not DRAM
+            result.skipped.append(jname)
+        self._journal_put(wf, journal)
+
+        cap = max_concurrent if max_concurrent else len(self.nodes)
+        pending = [j for j in jobs if j.name not in journal["jobs"]]
+        staging: Dict[str, Tuple[JobSpec, List[str], List]] = {}
+        inflight: Dict[str, Tuple[Any, JobSpec, List[str],
+                                  List[Lease]]] = {}
+        drains: List[Tuple[str, Any]] = []
+        done: Set[str] = set(journal["jobs"])
+
+        def fail(jname: str, exc: Exception):
+            journal["status"] = "failed"
+            journal.setdefault("jobs", {})[jname] = {
+                "status": "failed", "error": str(exc), "ts": time.time()}
+            self._journal_put(wf, journal)
+            # join the rest so no worker is left mutating state after
+            # the caller sees the failure
+            for name, (fut, _j, nodes, leases) in inflight.items():
+                try:
+                    fut.result(timeout=60)
+                except Exception:  # noqa: BLE001 — first error wins
+                    pass
+                self._release(nodes, leases)
+            # jobs still staging hold node_load (taken at allocate) but
+            # no leases yet; their stage futures are joined so nothing
+            # keeps writing pmem after the caller sees the failure
+            for _j, nodes, futs in staging.values():
+                for f in futs:
+                    try:
+                        f.result(timeout=60)
+                    except Exception:  # noqa: BLE001
+                        pass
+                self._release(nodes, [])
+            raise RuntimeError(
+                f"workflow {wf}: job {jname} failed") from exc
+
+        while pending or staging or inflight:
+            progressed = False
+            # (2-3) allocate + stage inputs for every ready job
+            for job in list(pending):
+                if len(staging) + len(inflight) >= cap:
+                    break
+                if not all(a in done for a in job.after):
+                    continue
+                pending.remove(job)
+                nodes = self._place(job, wf)
+                with self._lock:
+                    self._node_load[nodes[0]] = \
+                        self._node_load.get(nodes[0], 0) + 1
+                self._log("allocate", f"{wf}:{job.name} -> {nodes} "
+                          f"mode={job.memory_mode}")
+                try:
+                    stage_futs = self._stage_inputs(job, nodes, wf)
+                except Exception as e:  # noqa: BLE001 — input missing
+                    self._release(nodes, [])
+                    fail(job.name, e)
+                staging[job.name] = (job, nodes, stage_futs)
+                progressed = True
+            # (4-7) launch jobs whose stage-in finished
+            for name in list(staging):
+                job, nodes, futs = staging[name]
+                if not all(f.done() for f in futs):
+                    continue
+                del staging[name]
+                stage_err = None
+                for f in futs:
+                    try:
+                        f.result()
+                    except Exception as e:  # noqa: BLE001
+                        stage_err = e
+                if stage_err is not None:
+                    self._release(nodes, [])  # allocate's load increment
+                    fail(name, stage_err)
+                # lease every catalog input for the job's duration: GC
+                # cannot reclaim them mid-run, eviction keeps them warm
+                leases = []
+                for obj in job.inputs:
+                    if self.catalog.available(obj, wf):
+                        try:
+                            leases.append(self.catalog.acquire(
+                                obj, workflow=wf,
+                                owner=f"{wf}/{job.name}",
+                                ttl_s=JOB_LEASE_TTL_S))
+                        except KeyError:
+                            pass  # reclaimed between check and acquire:
+                            # the job's read falls back like _stage_inputs
+                task = self._make_task(
+                    job, nodes, wf, self._lineage_refs(job, wf, leases))
+                self._log("launch", f"{wf}:{job.name}")
+                inflight[name] = (self.dsched.run_job(nodes[0], task),
+                                  job, nodes, leases)
+                progressed = True
+            # (8) reap completions: journal, drains, lease release
+            for name in list(inflight):
+                fut, job, nodes, leases = inflight[name]
+                if not fut.done():
+                    continue
+                del inflight[name]
+                self._release(nodes, leases)
+                if fut.exception() is not None:
+                    fail(name, fut.exception())
+                outputs, versions = fut.result()
+                result[name] = outputs
+                done.add(name)
+                journal["jobs"][name] = {
+                    "status": "done", "nodes": nodes,
+                    "outputs": versions,
+                    "retained": sorted(job.retain),
+                    "drain": sorted(job.drain), "ts": time.time()}
+                self._journal_put(wf, journal)
+                for oname in job.drain:
+                    try:
+                        rec = self.catalog.record(oname, wf,
+                                                  versions.get(oname))
+                    except (KeyError, IOError, FileNotFoundError) as e:
+                        fail(name, e)
+                    drains.append((oname, self.dsched.drain(
+                        rec["home"], rec["object"], oname,
+                        version=rec["version"])))
+                    self._log("drain",
+                              f"{wf}:{oname} {rec['home']} -> external")
+                progressed = True
+            if not progressed:
+                if not staging and not inflight:
+                    raise RuntimeError("workflow deadlock (cyclic or "
+                                       "missing deps?)")
+                time.sleep(0.002)
+        # join final-output drains: a failed drain fails the workflow
+        # instead of vanishing (SupersededError stays benign — the
+        # newer version's own drain covers it)
+        drain_errors: List[Tuple[str, Exception]] = []
+        for oname, f in drains:
+            try:
+                f.result()
+            except SupersededError:
+                pass
+            except Exception as e:  # noqa: BLE001 — re-raised below
+                drain_errors.append((oname, e))
+        if drain_errors:
+            journal["status"] = "failed"
+            self._journal_put(wf, journal)
+            oname, err = drain_errors[0]
+            raise RuntimeError(
+                f"workflow {wf}: drain of final output {oname} "
+                f"failed") from err
+        journal["status"] = "done"
+        self._journal_put(wf, journal)
+        return result
+
+    def _release(self, nodes: List[str], leases: List[Lease]) -> None:
+        with self._lock:
+            self._node_load[nodes[0]] = \
+                max(0, self._node_load.get(nodes[0], 0) - 1)
+        for lease in leases:
+            self.catalog.release(lease)
+
+    # ---- resume after node loss --------------------------------------
+    def resume(self, jobs: Sequence[JobSpec], workflow: str, *,
+               lost_nodes: Sequence[str] = (),
+               max_concurrent: Optional[int] = None) -> WorkflowResult:
+        """Replay a journaled workflow after a node loss, re-running
+        ONLY the jobs whose retained outputs are unrecoverable. The
+        decision comes from the catalog's placement + replica acks —
+        zero object-store probes: a done job whose outputs all survive
+        (home alive, or acked replica on a survivor) is marked done from
+        the journal and its function is NEVER re-invoked; consumers read
+        the surviving copy (replica fallback) through the catalog."""
+        try:
+            journal = self.journal(workflow)
+        except (IOError, FileNotFoundError):
+            journal = {"jobs": {}}
+        with self._lock:
+            self._workflows.add(workflow)
+        names = {j.name for j in jobs}
+        pre_done: Dict[str, dict] = {}
+        replayed: List[str] = []
+        for jname, entry in journal.get("jobs", {}).items():
+            if entry.get("status") != "done" or jname not in names:
+                continue
+            lost = [o for o in entry.get("retained", ())
+                    if not self.catalog.recoverable(
+                        o, workflow, entry.get("outputs", {}).get(o),
+                        lost_nodes)]
+            if lost:
+                replayed.append(jname)
+                self._log("replay", f"{workflow}:{jname} lost "
+                          f"outputs {lost}")
+            else:
+                pre_done[jname] = entry
+                self._log("skip", f"{workflow}:{jname} outputs "
+                          f"recoverable (acked)")
+        result = self.run(jobs, workflow=workflow,
+                          max_concurrent=max_concurrent,
+                          _pre_done=pre_done)
+        # replayed = previously-done jobs re-run because outputs were
+        # lost; jobs the journal never recorded as done (new, or failed
+        # mid-run) ran too, but they are not loss-driven replays
+        result.replayed = sorted(replayed)
+        return result
+
+    # ---- lifecycle ---------------------------------------------------
     def cleanup(self, keep: Sequence[str] = ()) -> None:
-        """Post-workflow pmem scrub (paper §V items 6/10)."""
-        for nid, st in self.stores.items():
-            for name, v in st.list_objects():
-                if name not in keep:
-                    st.delete(name, v)
+        """Post-workflow reclaim (paper §V items 6/10) via the catalog's
+        lease/refcount GC — NOT a blanket scrub: datasets named in
+        ``keep`` stay retained, everything else this scheduler published
+        is unretained and reclaimed only at refcount zero (an active
+        lease from another consumer defers reclaim to its expiry).
+        Staged external input copies are scrubbed too."""
+        with self._lock:
+            mine = set(self._workflows)
+        for rec in self.catalog.records():
+            if rec.get("reclaimed") or rec["workflow"] not in mine:
+                continue
+            if rec["name"] in keep:
+                continue
+            self.catalog.unretain(rec["name"], rec["workflow"],
+                                  rec["version"])
+        for wf, name, version in self.catalog.gc():
+            self._log("cleanup", f"{wf}:{name}@v{version} reclaimed")
+        for nid, name in sorted(self._staged):
+            if name in keep:
+                continue
+            try:
+                if self.stores[nid].exists(name):
+                    self.stores[nid].delete(name)
                     self._log("cleanup", f"{name} on {nid}")
+            except IOError:
+                continue
+        self._staged = {(n, o) for n, o in self._staged if o in keep}

@@ -438,3 +438,66 @@ def test_dlm_missing_everywhere_still_advisory(cluster):
     res = c.tiered.prefetch(["serve/nope"]).result(timeout=30)
     assert res == {"hits": 0, "loads": 0, "missing": 1}
     c.tiered.join()  # nothing fatal recorded
+
+
+# ---------------------------------------------------------------------------
+# drain-tier recovery: external drained copy as the last resort,
+# consulted only via recorded drain acks (never probed blindly)
+# ---------------------------------------------------------------------------
+
+def test_restore_falls_back_to_drained_copy(cluster):
+    """Shard owner AND its ring buddy die: the replica is gone with the
+    buddy, but the acknowledged drain makes the step recoverable from
+    the external store."""
+    c = cluster
+    t = _tree(10)
+    c.tiered.save_async(1, t, drain=True).result(timeout=30)
+    c.tiered.quiesce()  # replicas AND drains acked
+    # node2's replica lives on node3 — kill both
+    c.kill_node("node2")
+    c.kill_node("node3")
+    tree, man = c.checkpointer.restore_latest_recoverable(
+        lost_nodes=["node2", "node3"])
+    assert man["step"] == 1
+    np.testing.assert_array_equal(tree["w"], t["w"])
+    np.testing.assert_array_equal(tree["b"], t["b"])
+
+
+def test_undrained_step_skipped_on_metadata_alone(cluster):
+    """A step that is neither replica- nor drain-recoverable for the
+    lost pair must be skipped without any store reads, landing on the
+    older drained step."""
+    c = cluster
+    c.tiered.save_async(1, _tree(11), drain=True).result(timeout=30)
+    c.tiered.quiesce()
+    # step 2: replication disabled and external dead -> LOCAL only
+    c.checkpointer.buddy = False
+
+    def boom(name, tree):
+        raise IOError("external down")
+    put, c.external.put = c.external.put, boom
+    c.tiered.save_async(2, _tree(12), drain=True).result(timeout=30)
+    c.tiered.quiesce()  # drain errors collected, no acks recorded
+    c.external.put = put
+    c.kill_node("node2")
+    c.kill_node("node3")
+    tree, man = c.checkpointer.restore_latest_recoverable(
+        lost_nodes=["node2", "node3"])
+    assert man["step"] == 1
+    assert c.checkpointer.last_restore_stats["skipped_by_ack"] == 1
+    np.testing.assert_array_equal(tree["w"], _tree(11)["w"])
+
+
+def test_drain_ack_alone_marks_step_plausible(cluster):
+    """With replication disabled entirely, an acked drain still makes a
+    lost node's step plausible (and restorable) from the external tier."""
+    c = cluster
+    c.checkpointer.buddy = False
+    c.tiered.save_async(1, _tree(13), drain=True).result(timeout=30)
+    c.tiered.quiesce()
+    c.kill_node("node1")
+    assert c.checkpointer._acks_plausible(1, ["node1"])
+    tree, man = c.checkpointer.restore_latest_recoverable(
+        lost_nodes=["node1"])
+    assert man["step"] == 1
+    np.testing.assert_array_equal(tree["w"], _tree(13)["w"])

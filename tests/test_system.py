@@ -48,16 +48,25 @@ def test_data_affinity_placement(cluster):
     assert placed["nodes"][0] == "node2"  # lands where the data lives
 
 
-def test_cleanup_scrubs_unretained(cluster):
+def test_cleanup_reclaims_unretained(cluster):
+    """cleanup() is the catalog's refcount/lease GC now: unretained
+    bytes are reclaimed, but the record (lineage) survives."""
     from repro.core.workflow import JobSpec
 
     def job(ctx):
         return {"scratch": {"x": np.ones(4)}}
 
-    cluster.workflows.run([JobSpec("j", job)])
-    assert cluster.view.locate("scratch")
+    res = cluster.workflows.run([JobSpec("j", job)])
+    wf = res.workflow_id
+    rec = cluster.catalog.record("scratch", wf)
+    assert cluster.view.locate(rec["object"], rec["version"])
     cluster.workflows.cleanup()
-    assert not cluster.view.locate("scratch")
+    rec = cluster.catalog.record("scratch", wf)
+    assert rec["reclaimed"]
+    assert not cluster.view.locate(rec["object"], rec["version"])
+    # lineage outlives the bytes
+    chain = cluster.catalog.lineage("scratch", wf)
+    assert chain and chain[0]["lineage"]["job"] == "j"
 
 
 def test_failure_recovery_end_to_end(cluster):
