@@ -6,7 +6,7 @@ PY ?= python
 SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast bench lint
+.PHONY: verify test-fast bench lint hygiene repair-smoke
 
 # `time` prefix: suite duration is surfaced wherever verify runs,
 # including the GitHub Actions log (CI calls these targets).
@@ -18,6 +18,21 @@ test-fast:
 
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
+
+# replica-repair smoke: one node loss + repair() must leave every acked
+# checkpoint shard / dataset / DLM object with >= 2 copies, and a second
+# loss fully recoverable with zero blind probes (CI runs this).
+repair-smoke:
+	$(PY) benchmarks/bench_repair.py --smoke
+
+# fail on tracked bytecode: .gitignore stops NEW __pycache__/.pyc adds,
+# but nothing caught files already committed — CI runs this too.
+hygiene:
+	@bad=$$(git ls-files | grep -E '(^|/)__pycache__/|\.py[co]$$' || true); \
+	if [ -n "$$bad" ]; then \
+		echo "tracked bytecode files (remove + commit):"; \
+		echo "$$bad"; exit 1; \
+	fi
 
 lint:
 	$(PY) -m pyflakes src tests benchmarks 2>/dev/null || \

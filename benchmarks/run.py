@@ -17,8 +17,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_checkpoint, bench_io_scaling,
-                            bench_kernels, bench_replication,
-                            bench_staging, bench_tiered_io, bench_tiering,
+                            bench_kernels, bench_repair,
+                            bench_replication, bench_staging,
+                            bench_tiered_io, bench_tiering,
                             bench_workflow)
     suites = {
         "io_scaling": bench_io_scaling.run,       # paper Table I
@@ -28,6 +29,7 @@ def main(argv=None) -> None:
         "tiered_io": bench_tiered_io.run,         # unified engine (Fig. 4+8)
         "replication": bench_replication.run,     # ack-ranked recovery
         "workflow": bench_workflow.run,           # dataset exchange (§V-A)
+        "repair": bench_repair.run,               # replication-factor repair
         "kernels": bench_kernels.run,
     }
     print("name,us_per_call,derived")

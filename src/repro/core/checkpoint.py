@@ -29,6 +29,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.data_scheduler import DataScheduler, ExternalStore
+from repro.core.dataset_exchange import ack_targets
 from repro.core.object_store import (PMemObjectStore, _flatten, _unflatten)
 from repro.kernels.ckpt_codec.ref import decode_ref, encode_ref
 
@@ -395,8 +396,9 @@ class DistributedCheckpointer:
                    lost_nodes: Sequence[str] = ()):
         """A delta chain's base payload for ``nid``, walking the same
         recovery tiers as the shard itself: node-local slot, then the
-        buddy replica (placed within the ring the BASE manifest was
-        saved under), then the ack-recorded external drained copy."""
+        ack-recorded replica targets (repair may have re-placed the
+        copy) with the base ring's buddy as the legacy fallback, then
+        the ack-recorded external drained copy."""
         base_man = self._meta_get_json(
             f"ckpt/manifest_step{base_step}.json")
         base_name = f"ckpt/slot{base_man['slot']}"
@@ -404,16 +406,22 @@ class DistributedCheckpointer:
             self._check_slot_step(self.stores[nid], base_name, base_step)
             return self.stores[nid].get(base_name)
         base_ring = base_man.get("nodes") or self.nodes
-        buddy = self.buddy_of(nid, base_ring)
         rep = f"replica/{nid}/{base_name}"
-        if buddy not in lost_nodes:
+        cands = [t for t in
+                 ack_targets(self.acks(base_step)
+                             .get(nid, {}).get("replica"))
+                 if t not in lost_nodes]
+        legacy = self.buddy_of(nid, base_ring)
+        if legacy not in cands and legacy not in lost_nodes:
+            cands.append(legacy)
+        for holder in cands:
             try:
-                if self.stores[buddy].exists(rep):
-                    self._check_slot_step(self.stores[buddy], rep,
+                if self.stores[holder].exists(rep):
+                    self._check_slot_step(self.stores[holder], rep,
                                           base_step)
-                    return self.stores[buddy].get(rep)
+                    return self.stores[holder].get(rep)
             except IOError:
-                pass  # buddy pool unreadable too — try the drain tier
+                continue  # holder pool unreadable too — keep walking
         drained = self._drained_payload(nid, base_step)
         if drained is not None:
             return drained
@@ -519,11 +527,11 @@ class DistributedCheckpointer:
                 continue  # held no shards at this step
             if acks.get(nid, {}).get("drain") and self.external is not None:
                 continue  # external drained copy outlives any pmem loss
-            rec = acks.get(nid, {}).get("replica")
-            if not rec:
+            targets = ack_targets(acks.get(nid, {}).get("replica"))
+            if not targets:
                 return False  # died between commit and replica ack
-            if rec.get("target") in lost_nodes:
-                return False  # replica landed on another dead node
+            if all(t in lost_nodes for t in targets):
+                return False  # every acked replica on another dead node
         base = rec_map.get("delta_base")
         if base is not None and base < step:  # bases are strictly older
             # a delta restore also reads the base chain: rank by ITS
@@ -557,21 +565,9 @@ class DistributedCheckpointer:
         obj = f"ckpt/slot{slot}"
         ring = manifest.get("nodes") or self.nodes
         cache: Dict[str, Dict[str, np.ndarray]] = {}
+        acks = self.acks(step)  # one metadata read for all shards
 
-        def pmem_part(nid: str):
-            """The shard from pmem (own slot, or buddy replica for a
-            lost node); None when both copies are gone — the caller
-            then consults the drain tier."""
-            src, name = nid, obj
-            if nid in lost_nodes:
-                src = self.buddy_of(nid, ring)
-                name = f"replica/{nid}/{obj}"
-                try:
-                    if src in lost_nodes or \
-                            not self.stores[src].exists(name):
-                        return None
-                except IOError:
-                    return None  # buddy pool died too
+        def checked_read(src: str, name: str):
             # CRC-verified read + step check against the SAME object
             # manifest: torn or reused-slot data fails here rather
             # than reassembling a mixed-step tree
@@ -581,6 +577,29 @@ class DistributedCheckpointer:
                 raise IOError(f"{name} holds step {got}, wanted "
                               f"{step} (slot reused)")
             return tree_part
+
+        def pmem_part(nid: str):
+            """The shard from pmem: the node's own slot, or — for a lost
+            node — a replica from the ack-recorded targets (repair may
+            have moved it off the ring buddy), then the ring buddy for
+            pre-ack legacy steps. None when every copy is gone — the
+            caller then consults the drain tier."""
+            if nid not in lost_nodes:
+                return checked_read(nid, obj)
+            name = f"replica/{nid}/{obj}"
+            cands = [t for t in
+                     ack_targets(acks.get(nid, {}).get("replica"))
+                     if t not in lost_nodes]
+            legacy = self.buddy_of(nid, ring)
+            if legacy not in cands and legacy not in lost_nodes:
+                cands.append(legacy)
+            for src in cands:
+                try:
+                    if self.stores[src].exists(name):
+                        return checked_read(src, name)
+                except IOError:
+                    continue  # that holder's pool died too
+            return None
 
         def node_payload(nid: str) -> Dict[str, np.ndarray]:
             if nid not in cache:

@@ -72,6 +72,17 @@ class SimCluster:
             time.sleep(0.02)
         # monitor sees it dead because heartbeats stop / are gone
 
+    def repair(self, lost_nodes) -> dict:
+        """Restore the replication factor after ``kill_node``: quiesce
+        in-flight I/O (a replicate that died with the node must not be
+        mistaken for pending work), then re-replicate every acked
+        object the loss reduced to a single copy (TieredIO.repair).
+        FailureRecovery and WorkflowScheduler.resume run this
+        automatically; this is the standalone entry point for tests,
+        benchmarks and operator tooling."""
+        self.tiered.quiesce()
+        return self.tiered.repair(lost_nodes)
+
     def shutdown(self) -> None:
         self.tiered.shutdown()
         self.scheduler.shutdown()

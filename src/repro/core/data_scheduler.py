@@ -217,9 +217,16 @@ class DataScheduler:
                     f"replicate {obj_name}: source rewritten before "
                     f"replication ran ({e})") from e
             _check_expect_meta(src_man, expect_meta, "replicate", obj_name)
-            man = self.stores[dst].put(name, tree, version,
-                                       meta={**src_man.get("meta", {}),
-                                             "replica_of": src})
+            # replica_of records the ORIGIN node. When repair copies an
+            # existing replica off a surviving holder, the source meta
+            # already carries the origin — preserve it instead of
+            # stamping the holder, so a twice-moved replica still says
+            # whose data it is.
+            src_meta = src_man.get("meta", {})
+            man = self.stores[dst].put(
+                name, tree, version,
+                meta={**src_meta,
+                      "replica_of": src_meta.get("replica_of", src)})
             self.stats[src]["replicated"] += man["nbytes"]
             # ack hook after the replica is durable on ``dst`` — a
             # failure here fails the task, never records a false ack

@@ -35,8 +35,15 @@ Record schema (``exch/<workflow>/<name>@v<version>.json``):
    "lineage": {"job": producing job, "workflow": wf id,
                "inputs": [[name, workflow, version] | ["__external__",
                           external name, 0], ...]},
-   "leases": {lease_id: {"owner", "expires", "ts"}},
-   "acks":   {"replica": {"target", "ts"}}}
+   "leases": {lease_id: {"owner", "expires", "ts",
+                         "released": bool (terminal tombstone)}},
+   "acks":   {"replica": {"target", "targets": [nids], "ts"}}}
+
+``acks.replica.targets`` lists EVERY node holding an acknowledged buddy
+copy (``target`` is kept for legacy single-replica records); replica
+repair (``TieredIO.repair``) prunes targets lost with their nodes and
+appends the freshly-placed buddy, so ``recoverable`` stays truthful
+across successive node losses.
 """
 from __future__ import annotations
 
@@ -53,11 +60,35 @@ EXTERNAL_INPUT = "__external__"
 
 DEFAULT_LEASE_TTL_S = 300.0
 
+#: default clock-skew margin for GC expiry decisions (see DatasetCatalog)
+DEFAULT_CLOCK_SKEW_S = 2.0
+
+
+def ack_targets(rec: Optional[dict]) -> List[str]:
+    """The acked replica holders recorded in one ack entry. Modern
+    records carry the full ``targets`` list (repair prunes + extends
+    it); legacy records carry a single ``target`` — read as a
+    one-element list, so every consumer (recoverability checks, replica
+    read order, the repair scan) handles both shapes identically."""
+    if not rec:
+        return []
+    targets = rec.get("targets")
+    if targets:
+        return list(targets)
+    target = rec.get("target")
+    return [target] if target else []
+
 
 @dataclass
 class Lease:
     """One consumer's hold on a dataset version. The dataset's bytes
-    cannot be reclaimed while any unexpired lease exists."""
+    cannot be reclaimed while any unexpired lease exists.
+
+    ``expires`` is stamped with the ACQUIRING node's wall clock;
+    ``expired`` here compares against the local clock and is only a
+    local-process hint. The authoritative reclaim decision is
+    ``DatasetCatalog.gc``, which pads expiry with the catalog's
+    ``clock_skew_s`` margin before touching bytes."""
     lease_id: str
     name: str
     workflow: str
@@ -125,9 +156,17 @@ class DatasetCatalog:
     """Pmem-resident catalog of named, versioned, leased datasets."""
 
     def __init__(self, stores: Dict[str, PMemObjectStore],
-                 exchange=None, cache=None):
+                 exchange=None, cache=None,
+                 clock_skew_s: float = DEFAULT_CLOCK_SKEW_S):
         self.stores = stores
         self.nodes = sorted(stores)
+        # GC expiry margin: lease `expires` stamps are written with the
+        # PRODUCER's wall clock, so a consumer-side gc() must not trust
+        # its own clock to the second. A lease is only treated as
+        # expired (reclaimable / prunable) once local time passes
+        # `expires + clock_skew_s` — bytes are never reclaimed while a
+        # lease could still be live on a node up to clock_skew_s ahead.
+        self.clock_skew_s = float(clock_skew_s)
         # TieredIO ExchangeChannel (replica fan-out with acks); attached
         # by TieredIO.attach_catalog, or left None for standalone use
         self.exchange = exchange
@@ -170,6 +209,12 @@ class DatasetCatalog:
                 if lid not in leases or \
                         rec.get("ts", 0) > leases[lid].get("ts", 0):
                     leases[lid] = rec
+                # release is TERMINAL, like reclaim: a stale pool copy
+                # that missed the release write still holds the lease
+                # live — without the tombstone winning the merge it
+                # would resurrect and block gc() forever
+                if rec.get("released"):
+                    leases[lid] = {**leases[lid], "released": True}
             for kind, rec in (c.get("acks") or {}).items():
                 if kind not in acks or \
                         rec.get("ts", 0) > acks[kind].get("ts", 0):
@@ -269,11 +314,27 @@ class DatasetCatalog:
     def _ack_recorder(self, workflow: str, name: str, version: int,
                       target: str):
         def record(_result) -> None:
-            self._update_record(
-                workflow, name, version,
-                lambda rec: rec["acks"].update(
-                    {"replica": {"target": target, "ts": time.time()}}))
+            def add(rec: dict) -> None:
+                targets = sorted(
+                    set(ack_targets(rec["acks"].get("replica")))
+                    | {target})
+                rec["acks"]["replica"] = {"target": target,
+                                          "targets": targets,
+                                          "ts": time.time()}
+            self._update_record(workflow, name, version, add)
         return record
+
+    def record_repair_ack(self, workflow: str, name: str, version: int,
+                          *, target: str, targets: Sequence[str]) -> None:
+        """Record a repair's completed re-replication: REPLACES the
+        target list (pruning holders lost with their nodes, adding the
+        fresh buddy). Runs only after the new copy is durable — the
+        RepairChannel calls this from inside the replicate task."""
+        def put(rec: dict) -> None:
+            rec["acks"]["replica"] = {"target": target,
+                                      "targets": sorted(targets),
+                                      "ts": time.time()}
+        self._update_record(workflow, name, version, put)
 
     def _update_record(self, workflow: str, name: str, version: int,
                        mutate) -> dict:
@@ -330,8 +391,7 @@ class DatasetCatalog:
         except IOError:
             pass  # home pool dead — fall through to replicas
         rep = f"replica/{home}/{obj}"
-        target = (rec.get("acks") or {}).get("replica", {}).get("target")
-        order = ([target] if target else []) + \
+        order = ack_targets((rec.get("acks") or {}).get("replica")) + \
             [n for n in self.nodes if n != home]
         seen: Set[str] = set()
         last: Optional[Exception] = None
@@ -365,8 +425,8 @@ class DatasetCatalog:
             return False
         if rec["home"] not in lost_nodes:
             return True
-        ack = (rec.get("acks") or {}).get("replica")
-        return bool(ack and ack.get("target") not in lost_nodes)
+        targets = ack_targets((rec.get("acks") or {}).get("replica"))
+        return any(t not in lost_nodes for t in targets)
 
     # ---- leases / refcount / GC --------------------------------------
     def acquire(self, name: str, *, workflow: str = "default",
@@ -396,22 +456,37 @@ class DatasetCatalog:
         return lease
 
     def release(self, lease: Lease) -> None:
+        """Release a lease by writing a TERMINAL tombstone (``released``,
+        like ``reclaimed``) rather than deleting the entry: a pool that
+        was down during this write keeps a stale copy with the lease
+        still live, and a plain deletion loses against it in the
+        cross-pool union — the lease would resurrect and block ``gc()``
+        until its far-off expiry. The tombstone keeps the original
+        ``expires`` and is pruned by gc once safely past it (when any
+        stale live copy is expired too)."""
         self._leases.pop(lease.lease_id, None)
+
+        def mark(r: dict) -> None:
+            old = r["leases"].get(lease.lease_id) or {}
+            r["leases"][lease.lease_id] = {
+                "owner": lease.owner,
+                "expires": old.get("expires", lease.expires),
+                "released": True, "ts": time.time()}
         try:
-            self._update_record(
-                lease.workflow, lease.name, lease.version,
-                lambda r: r["leases"].pop(lease.lease_id, None))
+            self._update_record(lease.workflow, lease.name,
+                                lease.version, mark)
         except (IOError, FileNotFoundError):
             pass  # record unreachable — expiry reclaims it eventually
 
     def refcount(self, name: str, workflow: str = "default",
                  version: Optional[int] = None,
                  now: Optional[float] = None) -> int:
-        """Number of unexpired leases on the dataset version."""
+        """Number of unexpired, unreleased leases on the dataset
+        version (released tombstones no longer hold the bytes)."""
         rec = self.record(name, workflow, version)
         now = now if now is not None else time.time()
         return sum(1 for l in (rec.get("leases") or {}).values()
-                   if l.get("expires", 0) > now)
+                   if l.get("expires", 0) > now and not l.get("released"))
 
     def unretain(self, name: str, workflow: str = "default",
                  version: Optional[int] = None) -> None:
@@ -440,11 +515,21 @@ class DatasetCatalog:
                          if f.endswith(".json"))
         return [self._get_json_merged(n) for n in sorted(names)]
 
-    def gc(self, now: Optional[float] = None) -> List[Tuple[str, str, int]]:
+    def gc(self, now: Optional[float] = None,
+           skew_s: Optional[float] = None) -> List[Tuple[str, str, int]]:
         """Reclaim pmem bytes of every dataset that is unretained AND has
         no unexpired lease. Expired leases are dropped; the record stays
         (marked ``reclaimed``) so lineage survives the bytes. Returns
         the reclaimed ``(workflow, name, version)`` triples.
+
+        **Expiry contract**: lease ``expires`` stamps come from the
+        PRODUCER's wall clock; this gc runs on the local one. A lease is
+        treated as expired only once ``now > expires + skew_s`` (default
+        ``self.clock_skew_s``), so a consumer node up to that margin
+        ahead never has bytes reclaimed out from under a live lease.
+        Released tombstones are pruned on the same schedule — only after
+        any stale still-live pool copy of the lease is expired too, so
+        pruning can never let one resurrect.
 
         The decision runs inside the record's locked read-mutate-write
         against the CURRENT copy (not the scan snapshot), and the
@@ -453,6 +538,7 @@ class DatasetCatalog:
         reclaim) or sees ``reclaimed`` and is refused; it is never
         silently destroyed."""
         now = now if now is not None else time.time()
+        margin = self.clock_skew_s if skew_s is None else float(skew_s)
         reclaimed: List[Tuple[str, str, int]] = []
         for rec in self.records():
             if rec.get("reclaimed"):
@@ -460,10 +546,15 @@ class DatasetCatalog:
             decision: Dict[str, bool] = {}
 
             def decide(r: dict, decision=decision) -> None:
-                live = {lid: l for lid, l in
+                # keep everything not safely past expiry (skew margin),
+                # tombstones included; live = the subset actually
+                # holding the bytes (unexpired AND unreleased)
+                keep = {lid: l for lid, l in
                         (r.get("leases") or {}).items()
-                        if l.get("expires", 0) > now}
-                r["leases"] = live  # prune expired against current copy
+                        if l.get("expires", 0) + margin > now}
+                r["leases"] = keep  # prune against the current copy
+                live = {lid: l for lid, l in keep.items()
+                        if not l.get("released")}
                 if not r.get("retained") and not live \
                         and not r.get("reclaimed"):
                     r["reclaimed"] = True

@@ -84,6 +84,9 @@ class FailureRecovery:
         # "probed": m} — steps ruled out on the manifest ack map alone
         # vs. steps that needed an actual restore attempt
         self.last_restore_stats: dict = {}
+        # the last recovery's RepairChannel report: every acked object
+        # the loss reduced to a single copy, re-replicated + re-acked
+        self.last_repair_report: dict = {}
 
     def quiesce_inflight(self) -> List[Exception]:
         """Consume every in-flight TieredIO future before reading the
@@ -96,12 +99,21 @@ class FailureRecovery:
         self.inflight_errors.extend(errors)
         return errors
 
-    def check_and_recover(self, now: Optional[float] = None):
+    def check_and_recover(self, now: Optional[float] = None,
+                          repair: bool = True):
         """Returns None if healthy, else (restored_tree, manifest,
         dead_nodes) — restored from the newest checkpoint whose ack map
         marks it recoverable for the dead set (steps that died between
         commit and replica ack are skipped on metadata alone), with dead
-        nodes' shards served by their buddies."""
+        nodes' shards served by their buddies.
+
+        With ``repair`` (default) the recovery then restores the
+        replication factor: every acked checkpoint shard / dataset / DLM
+        object the loss reduced to a single surviving copy is
+        re-replicated to a fresh live buddy and re-acked
+        (``TieredIO.repair``; report in ``last_repair_report``) — so the
+        resumed run tolerates the NEXT node loss too, instead of running
+        on silently-single copies."""
         dead = self.hb.dead_nodes(self.timeout_s, now)
         if not dead:
             return None
@@ -111,4 +123,7 @@ class FailureRecovery:
         tree, manifest = self.ckpt.restore_latest_recoverable(
             lost_nodes=dead)
         self.last_restore_stats = dict(self.ckpt.last_restore_stats)
+        self.last_repair_report = {}
+        if repair and self.tiered is not None:
+            self.last_repair_report = self.tiered.repair(dead)
         return tree, manifest, dead

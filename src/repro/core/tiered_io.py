@@ -53,20 +53,61 @@ when replication was disabled (external durability subsumes it). The
 levels are derived from the PERSISTED ack map, not in-process futures,
 so ``restore_latest_recoverable`` ranks steps by the same records after
 a crash: a step whose ack map shows a lost shard owner without a replica
-ack is skipped without a single store read. The channel also replicates
-DLM objects (``offload``) to the home node's buddy, and the DLM cache
-falls back to ``replica/<nid>/dlm/...`` reads when the home pool is
-dead — the multi-node DLM of the roadmap.
+ack is skipped without a single store read.
+
+DLM and dataset acks — the whole data plane, not just checkpoints
+----------------------------------------------------------------
+The same under-promise discipline covers the other two ack surfaces:
+
+  * **DLM objects** (``offload``, serve KV/session spill): every buddy
+    copy of ``dlm/<name>`` is registered through the replication channel
+    and acknowledged into the sibling record ``dlm/acks.json``
+    (``DLMAckRegistry`` — one small JSON replicated to every live pool
+    and union-merged across copies like checkpoint ack records). A dirty
+    DLM write-back (eviction/flush of a mutated object) re-queues the
+    buddy copy through the same path, so replicas never go stale behind
+    the cache. Replica-fallback reads consult the acked targets first.
+  * **Datasets** (``DatasetCatalog.publish``): the exchange channel's
+    ack is recorded into the catalog record (``acks.replica``).
+
+Every ack records the full ``targets`` list of nodes holding an
+acknowledged copy (legacy records carry a single ``target``; readers
+treat it as a one-element list). An object is recoverable for a lost
+set as long as ANY acked copy survives it.
+
+Replica repair — restoring the replication factor after node loss
+-----------------------------------------------------------------
+Write-time replication alone decays: one node loss silently drops every
+object it homed or buddied to a single copy, and a SECOND loss then
+destroys data that was "REPLICATED" the whole time. ``RepairChannel``
+(``TieredIO.repair(lost_nodes)``) closes that loop. It walks the three
+ack surfaces — ``ckpt/acks_step<N>.json``, the catalog records' ``acks``
+and ``dlm/acks.json`` — and for every object whose acked copies
+intersect ``lost_nodes`` down to a SINGLE survivor, re-replicates the
+surviving copy to a fresh live buddy through the data scheduler,
+re-acking (with the pruned + extended ``targets`` list) only when the
+new copy is durable. The scan is metadata-only: zero blind object-store
+probes — the only object reads are the sources of the copies actually
+made. Objects that were never acked are not repair's business (nothing
+promised), and objects with zero surviving pmem copies are reported
+(``unrepairable`` / ``drain_only``) rather than guessed at. A source
+overwritten since its ack (checkpoint slot reuse) raises the benign
+``SupersededError`` and is skipped. After ``repair``, every previously
+acked object again tolerates any single node loss, and recovery after a
+SECOND loss still decides from acks alone.
 """
 from __future__ import annotations
 
 import collections
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Dict, Iterable, List, Optional, Sequence
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.core.checkpoint import DistributedCheckpointer
 from repro.core.data_scheduler import DataScheduler, SupersededError
+from repro.core.dataset_exchange import (ack_targets, put_json_all_pools,
+                                         read_json_copies)
 from repro.core.tiering import DLMCache
 
 
@@ -192,7 +233,8 @@ class ReplicationChannel:
                 futs.append(self.scheduler.replicate(
                     nid, obj, buddy, expect_meta={"step": step},
                     on_complete=self._ack(step, nid, "replica",
-                                          {"target": buddy})))
+                                          {"target": buddy,
+                                           "targets": [buddy]})))
         if drain and ckpt.external is not None:
             for nid in ring:
                 ext = f"ckpt_step{step}_{nid}"
@@ -204,11 +246,18 @@ class ReplicationChannel:
             sink.extend(futs)
         return futs
 
-    def replicate_object(self, src: str, name: str, dst: str) -> Future:
+    def replicate_object(self, src: str, name: str, dst: str,
+                         dst_name: Optional[str] = None,
+                         expect_meta: Optional[dict] = None,
+                         on_complete=None) -> Future:
         """Replicate a non-checkpoint pmem object (DLM page, session
         state) to a buddy node — readable as ``replica/<src>/<name>``
-        when the home pool dies (multi-node DLM fallback)."""
-        return self.scheduler.replicate(src, name, dst)
+        when the home pool dies (multi-node DLM fallback). ``on_complete``
+        runs inside the task once the copy is durable — the DLM ack
+        registry records per-object acks through it."""
+        return self.scheduler.replicate(src, name, dst, dst_name=dst_name,
+                                        expect_meta=expect_meta,
+                                        on_complete=on_complete)
 
     def _ack(self, step: int, nid: str, kind: str, info: dict):
         ckpt = self.checkpointer
@@ -234,14 +283,318 @@ class ExchangeChannel:
         self._track = track  # TieredIO future-tracking hook
 
     def submit(self, src: str, obj: str, dst: str, *, version: int = 0,
+               dst_name: Optional[str] = None,
                expect_meta: Optional[dict] = None,
                on_ack=None) -> Future:
+        """``dst_name`` overrides the replica name — repair copies a
+        surviving replica ``replica/<home>/<obj>`` from its HOLDER, so
+        the destination name must keep the original home, not the
+        holder, or reads would never find it."""
         fut = self.scheduler.replicate(src, obj, dst, version=version,
+                                       dst_name=dst_name,
                                        expect_meta=expect_meta,
                                        on_complete=on_ack)
         if self._track is not None:
             self._track(fut)
         return fut
+
+
+class DLMAckRegistry:
+    """Per-object replica acks for DLM objects — the third ack surface.
+
+    One small sibling record, ``dlm/acks.json``, replicated to every
+    live pool and merged across copies on read (same discipline as
+    ``ckpt/acks_step<N>.json``): object names are union'd, and for the
+    same object the newest record (by its own ``ts``) wins wholesale —
+    a repair that PRUNED dead targets must not have them resurrected by
+    a stale pool copy. Entries:
+
+      {"objects": {"dlm/<name>": {"home": nid, "targets": [nids],
+                                  "ts": ...}}, "ts": ...}
+
+    ``record`` is called from scheduler worker threads inside the
+    replicate task, after the buddy copy is durable — a failed copy
+    records nothing, so the registry under-promises, never
+    over-promises. The write-through cache mirrors the catalog's: every
+    mutation in this process rewrites all live pools under the lock, so
+    the cached copy IS the merged state; a fresh process starts cold
+    and reads the replicated pool copies."""
+
+    NAME = "dlm/acks.json"
+
+    def __init__(self, stores, nodes: Sequence[str]):
+        self.stores = stores
+        self.nodes = sorted(nodes)
+        self._lock = threading.Lock()
+        self._cache: Optional[Dict[str, dict]] = None
+
+    def _merged_locked(self) -> Dict[str, dict]:
+        if self._cache is not None:
+            return self._cache
+        try:
+            copies = read_json_copies(self.stores, self.nodes, self.NAME)
+        except (IOError, FileNotFoundError):
+            return {}
+        merged: Dict[str, dict] = {}
+        for c in copies:
+            for name, rec in (c.get("objects") or {}).items():
+                if name not in merged or \
+                        rec.get("ts", 0) > merged[name].get("ts", 0):
+                    merged[name] = rec
+        # cache the cold read too: a read-only process (serve fallback
+        # path) must not pay N pool reads + a merge per fetch
+        self._cache = merged
+        return merged
+
+    def record(self, name: str, home: str, target: str,
+               targets: Optional[Sequence[str]] = None) -> None:
+        """Ack one durable buddy copy of ``name`` (a full store object
+        name, e.g. ``dlm/serve/sess``). Default: ``target`` joins the
+        existing target set. Repair passes an explicit ``targets`` list
+        to REPLACE it (pruning targets lost with their nodes)."""
+        with self._lock:
+            objects = dict(self._merged_locked())
+            if targets is None:
+                targets = sorted(set(ack_targets(objects.get(name)))
+                                 | {target})
+            objects[name] = {"home": home, "targets": sorted(targets),
+                             "ts": time.time()}
+            put_json_all_pools(self.stores, self.nodes, self.NAME,
+                               {"objects": objects, "ts": time.time()})
+            self._cache = objects
+
+    def objects(self) -> Dict[str, dict]:
+        """The merged per-object ack map ({} when nothing ever acked)."""
+        with self._lock:
+            return dict(self._merged_locked())
+
+    def targets(self, name: str) -> List[str]:
+        """Acked replica holders of ``name`` (possibly empty)."""
+        with self._lock:
+            return ack_targets(self._merged_locked().get(name))
+
+
+class RepairChannel:
+    """Ack-driven replica repair: restore the replication factor.
+
+    ``repair(lost_nodes)`` scans the three ack surfaces (checkpoint
+    step acks, dataset catalog records, the DLM ack registry) for
+    objects whose acked copy set — {home} ∪ acked targets — intersects
+    ``lost_nodes`` down to exactly ONE survivor, and re-replicates each
+    from that survivor to a fresh live buddy via data-scheduler tasks,
+    re-acking (pruned targets + the new one) only when the copy is
+    durable. Decisions come from the persisted ack records alone; the
+    only object-store reads are the sources of the copies made."""
+
+    def __init__(self, tiered: "TieredIO"):
+        self.tiered = tiered
+
+    # ---- shared mechanics --------------------------------------------
+    @staticmethod
+    def _single_survivor(home: str, targets: Sequence[str],
+                         lost: Set[str]) -> Optional[str]:
+        """The lone surviving acked copy holder, or None when the object
+        needs no repair (>= 2 survivors), was never replicated (nothing
+        was promised), or lost every pmem copy (repair cannot invent
+        bytes; the drain tier, when acked, still covers checkpoints)."""
+        pre = {home} | set(targets)
+        cur = pre - lost
+        if len(pre) >= 2 and len(cur) == 1:
+            return next(iter(cur))
+        return None
+
+    def _new_target(self, live: Sequence[str], survivor: str,
+                    exclude: Set[str]) -> Optional[str]:
+        """The next live node after ``survivor`` in ring order that
+        holds no copy yet — the same rotation ``buddy_of`` uses, so
+        repair load spreads instead of piling onto one node."""
+        ring = list(live)
+        if survivor not in ring:
+            return None
+        i = ring.index(survivor)
+        for k in range(1, len(ring)):
+            cand = ring[(i + k) % len(ring)]
+            if cand not in exclude:
+                return cand
+        return None
+
+    def _live(self, lost: Set[str]) -> List[str]:
+        ckpt = self.tiered.checkpointer
+        nodes = ckpt._live_nodes() if ckpt is not None else \
+            sorted(self.tiered.scheduler.stores)
+        return [n for n in nodes if n not in lost]
+
+    def _plan(self, home: str, targets: Sequence[str], lost: Set[str],
+              live: Sequence[str], report: dict, *,
+              drain_ok: bool = False
+              ) -> Optional[Tuple[str, str, List[str]]]:
+        """One object's repair decision + report accounting, shared by
+        the three scans: (survivor, new_target, new_targets) when a
+        re-replication is due, else None after counting the object as
+        ``healthy`` (>= 2 surviving copies), ``skipped`` (never acked a
+        replica — repair does not own single-copy-by-design objects),
+        or ``unrepairable`` (no surviving pmem copy, or no live node
+        left to host a new one; ``drain_only`` when an acked external
+        drain still covers it)."""
+        survivor = self._single_survivor(home, targets, lost)
+        if survivor is None:
+            pre = {home} | set(targets)
+            if len(pre) < 2:
+                report["skipped"] += 1
+            elif not (pre - lost):
+                report["unrepairable"] += 1
+                if drain_ok:
+                    report["drain_only"] += 1
+            else:
+                report["healthy"] += 1
+            return None
+        new = self._new_target(live, survivor,
+                               ({home} | set(targets)) - lost)
+        if new is None:
+            report["unrepairable"] += 1
+            return None
+        return survivor, new, sorted((set(targets) - lost) | {new})
+
+    # ---- the scan ----------------------------------------------------
+    def repair(self, lost_nodes: Sequence[str]) -> dict:
+        """Scan + re-replicate + join. Returns a report:
+        ``checkpoint``/``dataset``/``dlm`` count completed re-acked
+        copies, ``repaired`` lists them as (surface, object, survivor,
+        new_target), ``healthy`` objects that still have >= 2 surviving
+        acked copies (nothing to do), ``superseded`` sources overwritten
+        since their ack (benign — the newer object carries its own
+        acks), ``unrepairable`` objects with no surviving pmem copy or
+        no live node left to host a new one (``drain_only`` the subset
+        an acked external drain still covers), ``skipped`` single-copy
+        objects that never acked a replica (repair does not own them),
+        and ``errors`` real copy failures."""
+        lost = set(lost_nodes)
+        report = {"checkpoint": 0, "dataset": 0, "dlm": 0, "healthy": 0,
+                  "superseded": 0, "unrepairable": 0, "drain_only": 0,
+                  "skipped": 0, "repaired": [], "errors": []}
+        live = self._live(lost)
+        futs: List[Tuple[str, str, str, str, Future]] = []
+        if self.tiered.checkpointer is not None:
+            self._scan_checkpoints(lost, live, report, futs)
+        self._scan_dlm(lost, live, report, futs)
+        if self.tiered.catalog is not None:
+            self._scan_datasets(lost, live, report, futs)
+        for surface, obj, survivor, new, fut in futs:
+            try:
+                fut.result()
+            except SupersededError:
+                report["superseded"] += 1
+            except Exception as e:  # noqa: BLE001 — reported, not raised
+                report["errors"].append(e)
+            else:
+                report[surface] += 1
+                report["repaired"].append((surface, obj, survivor, new))
+        return report
+
+    def _scan_checkpoints(self, lost: Set[str], live: List[str],
+                          report: dict, futs: List) -> None:
+        ckpt = self.tiered.checkpointer
+        seen_slots: Set[int] = set()
+        for step in sorted(ckpt.available_steps(), reverse=True):
+            try:
+                rec_map = ckpt._meta_get_json(ckpt._ack_name(step))
+                slot = ckpt._meta_get_json(
+                    f"ckpt/manifest_step{step}.json")["slot"]
+            except (IOError, FileNotFoundError, KeyError):
+                continue  # pre-ack legacy step: nothing was promised
+            if slot in seen_slots:
+                # a newer step reused this slot: the bytes on pmem are
+                # no longer this step's (its own replicate would only
+                # raise SupersededError) — skip on metadata alone
+                report["superseded"] += 1
+                continue
+            seen_slots.add(slot)
+            ring = rec_map.get("ring") or ckpt.nodes
+            acks = rec_map.get("acks") or {}
+            obj = f"ckpt/slot{slot}"
+            for nid in ring:
+                targets = ack_targets(acks.get(nid, {}).get("replica"))
+                plan = self._plan(
+                    nid, targets, lost, live, report,
+                    drain_ok=bool(acks.get(nid, {}).get("drain")
+                                  and ckpt.external is not None))
+                if plan is None:
+                    continue
+                survivor, new, new_targets = plan
+                src_obj = obj if survivor == nid else \
+                    f"replica/{nid}/{obj}"
+
+                def ack(_man, step=step, nid=nid, new=new,
+                        new_targets=new_targets) -> None:
+                    ckpt.record_ack(step, nid, "replica",
+                                    {"target": new,
+                                     "targets": new_targets})
+                futs.append(("checkpoint", f"step{step}/{nid}", survivor,
+                             new, self.tiered.scheduler.replicate(
+                                 survivor, src_obj, new,
+                                 dst_name=f"replica/{nid}/{obj}",
+                                 expect_meta={"step": step},
+                                 on_complete=ack)))
+
+    def _scan_dlm(self, lost: Set[str], live: List[str],
+                  report: dict, futs: List) -> None:
+        reg = self.tiered.dlm_acks
+        if reg is None:
+            return
+        for name, rec in reg.objects().items():
+            home = rec.get("home")
+            targets = ack_targets(rec)
+            plan = self._plan(home, targets, lost, live, report)
+            if plan is None:
+                continue
+            survivor, new, new_targets = plan
+            src_obj = name if survivor == home else \
+                f"replica/{home}/{name}"
+
+            def ack(_man, name=name, home=home, new=new,
+                    new_targets=new_targets) -> None:
+                reg.record(name, home, new, targets=new_targets)
+            futs.append(("dlm", name, survivor, new,
+                         self.tiered.scheduler.replicate(
+                             survivor, src_obj, new,
+                             dst_name=f"replica/{home}/{name}",
+                             on_complete=ack)))
+
+    def _scan_datasets(self, lost: Set[str], live: List[str],
+                       report: dict, futs: List) -> None:
+        catalog = self.tiered.catalog
+        for rec in catalog.records():
+            if rec.get("reclaimed"):
+                continue
+            home = rec["home"]
+            targets = ack_targets((rec.get("acks") or {}).get("replica"))
+            plan = self._plan(home, targets, lost, live, report)
+            if plan is None:
+                continue
+            survivor, new, new_targets = plan
+            wf, name, v = rec["workflow"], rec["name"], rec["version"]
+            src_obj = rec["object"] if survivor == home else \
+                f"replica/{home}/{rec['object']}"
+
+            def ack(_man, wf=wf, name=name, v=v, new=new,
+                    new_targets=new_targets) -> None:
+                catalog.record_repair_ack(wf, name, v, target=new,
+                                          targets=new_targets)
+            chan = self.tiered.exchange
+            key = f"exch/{wf}/{name}@v{v}"
+            if chan is not None:
+                fut = chan.submit(
+                    survivor, src_obj, new, version=v,
+                    dst_name=f"replica/{home}/{rec['object']}",
+                    expect_meta={"dataset": name, "version": v},
+                    on_ack=ack)
+            else:
+                fut = self.tiered.scheduler.replicate(
+                    survivor, src_obj, new, version=v,
+                    dst_name=f"replica/{home}/{rec['object']}",
+                    expect_meta={"dataset": name, "version": v},
+                    on_complete=ack)
+            futs.append(("dataset", key, survivor, new, fut))
 
 
 class TieredIO:
@@ -269,8 +622,17 @@ class TieredIO:
         # home node of the DLM cache (whose store it fronts): replica
         # fallback reads resolve relative to it
         self._home_nid: Optional[str] = None
+        # per-object DLM replica acks (dlm/acks.json) + the repair scan
+        # over all three ack surfaces
+        self.dlm_acks: Optional[DLMAckRegistry] = None
+        self.repair_channel = RepairChannel(self)
+        # dlm/<name>s the caller opted out of replicating (offload
+        # replicate=False): dirty write-backs skip them too
+        self._dlm_no_replicate: Set[str] = set()
         if checkpointer is not None:
             self._home_nid = checkpointer.nodes[0]
+            self.dlm_acks = DLMAckRegistry(checkpointer.stores,
+                                           checkpointer.nodes)
             if cache is not None:
                 for nid, st in checkpointer.stores.items():
                     if st is cache.store:
@@ -278,6 +640,11 @@ class TieredIO:
                         break
                 if cache.fallback_reader is None:
                     cache.fallback_reader = self._dlm_replica_read
+                if cache.on_writeback is None:
+                    # every durable DLM write-back (offload flush, dirty
+                    # eviction) re-queues the buddy copy + ack, so the
+                    # replica tier never lags the home pool
+                    cache.on_writeback = self._queue_dlm_replica
         self.max_inflight = max_inflight_saves or (
             checkpointer.slots if checkpointer is not None else 2)
         self.errors: List[Exception] = []       # post-commit failures
@@ -425,35 +792,63 @@ class TieredIO:
             return self._tickets[-1] if self._tickets else None
 
     # ---- object channel (serve KV pages, session state) --------------
+    def _queue_dlm_replica(self, name: str) -> None:
+        """Queue a buddy copy of ``dlm/<name>`` + its ack (into the
+        DLM ack registry) the moment the home-pool bytes are durable.
+        Called by ``offload`` and by the cache's write-back hook (dirty
+        eviction/flush), so replicas track every durable write, not
+        just the first. The buddy comes from the LIVE ring, like the
+        checkpoint path: after the static buddy dies, replicas must
+        land on a survivor instead of failing forever."""
+        ckpt, home = self.checkpointer, self._home_nid
+        if (self.replication is None or ckpt is None or home is None
+                or name in self._dlm_no_replicate):
+            return
+        ring = ckpt._live_nodes()
+        if home not in ring or len(ring) < 2:
+            return
+        buddy = ckpt.buddy_of(home, ring)
+        obj = f"dlm/{name}"
+        reg = self.dlm_acks
+
+        def ack(_man) -> None:
+            if reg is not None:
+                # REPLACE the target list: this copy carries the bytes
+                # just written back, so every other acked copy is now
+                # stale (a repair-added extra, or a buddy that died and
+                # may rejoin with old pmem) and must leave the record —
+                # acked targets always hold the CURRENT bytes
+                reg.record(obj, home, buddy, targets=[buddy])
+        rfut = self.replication.replicate_object(
+            home, obj, buddy, on_complete=ack)
+        self._track_future(rfut)
+
     def offload(self, name: str, tree, *, replicate: bool = True) -> Future:
         """Persist an object through the DLM write-back cache (or the
         checkpointer's meta store when no cache is attached). The future
         resolves once the object is durable in the home node's pmem;
         with ``replicate`` (default) a buddy replica is then queued
-        through the replication channel so reads survive the home
-        node's death (multi-node DLM)."""
+        through the replication channel — acked per object into
+        ``dlm/acks.json`` when durable — so reads survive the home
+        node's death (multi-node DLM) and ``repair`` can restore the
+        replication factor after a loss. ``replicate=False`` marks the
+        object node-local: later dirty write-backs skip it too."""
+        if replicate:
+            self._dlm_no_replicate.discard(name)
+        else:
+            self._dlm_no_replicate.add(name)
 
         def _persist():
             if self.cache is not None:
                 self.cache.put(name, tree)
-                self.cache.flush(name)  # write back just this object
+                # write back just this object; the cache's write-back
+                # hook queues the buddy replica + ack
+                self.cache.flush(name)
             else:
                 assert self.checkpointer is not None
                 self.checkpointer._meta_store().put(f"dlm/{name}", tree)
+                self._queue_dlm_replica(name)
             self.stats["offloads"] += 1
-            ckpt = self.checkpointer
-            if (replicate and self.replication is not None
-                    and ckpt is not None and self._home_nid is not None):
-                # buddy from the LIVE ring, like the checkpoint path:
-                # after the static buddy dies, replicas must land on a
-                # survivor instead of failing forever
-                ring = ckpt._live_nodes()
-                if self._home_nid in ring and len(ring) > 1:
-                    buddy = ckpt.buddy_of(self._home_nid, ring)
-                    rfut = self.replication.replicate_object(
-                        self._home_nid, f"dlm/{name}", buddy)
-                    with self._lock:
-                        self._futures.append(rfut)
             return name
 
         fut = self._submit(_persist)
@@ -465,13 +860,16 @@ class TieredIO:
     def _dlm_replica_read(self, name: str):
         """Multi-node DLM fallback: when the home node's pool is dead
         (or no longer holds ``dlm/<name>``), read the buddy replica
-        placed by ``offload`` — preferring the home's ring buddy, then
-        any surviving node holding ``replica/<home>/dlm/<name>``."""
+        placed by ``offload``/``repair`` — preferring the ack-recorded
+        targets, then the home's ring buddy, then any surviving node
+        holding ``replica/<home>/dlm/<name>``."""
         ckpt = self.checkpointer
         home = self._home_nid
         assert ckpt is not None and home is not None
         rep = f"replica/{home}/dlm/{name}"
-        order = [ckpt.buddy_of(home)] + \
+        acked = self.dlm_acks.targets(f"dlm/{name}") \
+            if self.dlm_acks is not None else []
+        order = acked + [ckpt.buddy_of(home)] + \
             [n for n in ckpt.nodes if n != home]
         seen = set()
         last: Optional[Exception] = None
@@ -569,6 +967,16 @@ class TieredIO:
             self._prune_done_locked()
             self._futures.append(fut)
         return fut
+
+    # ---- repair channel (restore the replication factor) -------------
+    def repair(self, lost_nodes: Sequence[str]) -> dict:
+        """Re-replicate every acked object (checkpoint shard, dataset,
+        DLM object) whose copies ``lost_nodes`` reduced to a single
+        survivor, to a fresh live buddy — re-acked when durable. Joins
+        the copies; returns the RepairChannel report. Call after the
+        recovery path has quiesced in-flight work (FailureRecovery and
+        WorkflowScheduler.resume do this wiring for you)."""
+        return self.repair_channel.repair(lost_nodes)
 
     # ---- burst-buffer channel (external -> pmem) ---------------------
     def stage_in(self, nid: str, names: Sequence[str],

@@ -116,10 +116,18 @@ class DLMCache:
     the home pool is dead — the multi-node DLM read path."""
 
     def __init__(self, store: PMemObjectStore, capacity_bytes: int,
-                 fallback_reader: Optional[Callable[[str], Any]] = None):
+                 fallback_reader: Optional[Callable[[str], Any]] = None,
+                 on_writeback: Optional[Callable[[str], None]] = None):
         self.store = store
         self.capacity = capacity_bytes
         self.fallback_reader = fallback_reader
+        # called with the object name after every durable write-back to
+        # pmem (dirty eviction, flush, oversized bypass). TieredIO wires
+        # it to queue a buddy replica + ack, so the replica tier tracks
+        # every durable write instead of only the first offload — a
+        # mutated object's buddy copy must never serve stale bytes after
+        # the home pool dies. Must not call back into this cache.
+        self.on_writeback = on_writeback
         self._cache: "collections.OrderedDict[str, Any]" = \
             collections.OrderedDict()
         self._sizes: Dict[str, int] = {}
@@ -147,6 +155,8 @@ class DLMCache:
         tree = self._cache.pop(name)
         if self._dirty.pop(name, False):
             self.store.put(f"dlm/{name}", tree)  # write-back
+            if self.on_writeback is not None:
+                self.on_writeback(name)
         self._used -= self._sizes.pop(name, 0)
         self._last_used.pop(name, None)
         self._gen[name] = self._gen.get(name, 0) + 1
@@ -184,6 +194,8 @@ class DLMCache:
                 # bypass DRAM, persist straight to pmem (write-back now)
                 self._drop_stale(name)
                 self.store.put(f"dlm/{name}", tree)
+                if self.on_writeback is not None:
+                    self.on_writeback(name)
                 self.bypasses += 1
                 return
             self._insert(name, tree, nb, dirty=True)
@@ -309,6 +321,8 @@ class DLMCache:
                 if self._dirty.get(n) and n in self._cache:
                     self.store.put(f"dlm/{n}", self._cache[n])
                     self._dirty[n] = False
+                    if self.on_writeback is not None:
+                        self.on_writeback(n)
 
 
 class TieredKVCache:

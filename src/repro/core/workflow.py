@@ -23,7 +23,10 @@ This scheduler runs that sequence CONCURRENTLY and RECOVERABLY:
     the jobs whose retained outputs the catalog's replica acks mark
     unrecoverable — completed jobs with surviving bytes (home or acked
     replica) are never re-invoked, and the decision reads zero objects,
-    mirroring ``restore_latest_recoverable``;
+    mirroring ``restore_latest_recoverable``. Resume also restores the
+    replication factor first (``TieredIO.repair``): surviving datasets
+    down to a single copy regain an acked buddy, so a SECOND loss
+    still resumes without replays;
   * final-output drains are joined at the end of ``run``: a failed
     drain fails the workflow (``SupersededError`` stays benign).
 
@@ -98,6 +101,7 @@ class WorkflowResult(dict):
         self.workflow_id = workflow_id
         self.skipped: List[str] = []    # done jobs NOT re-invoked
         self.replayed: List[str] = []   # jobs re-run because outputs lost
+        self.repair_report: dict = {}   # resume's TieredIO.repair report
 
 
 class WorkflowScheduler:
@@ -439,20 +443,38 @@ class WorkflowScheduler:
     # ---- resume after node loss --------------------------------------
     def resume(self, jobs: Sequence[JobSpec], workflow: str, *,
                lost_nodes: Sequence[str] = (),
-               max_concurrent: Optional[int] = None) -> WorkflowResult:
+               max_concurrent: Optional[int] = None,
+               repair: bool = True) -> WorkflowResult:
         """Replay a journaled workflow after a node loss, re-running
         ONLY the jobs whose retained outputs are unrecoverable. The
         decision comes from the catalog's placement + replica acks —
         zero object-store probes: a done job whose outputs all survive
         (home alive, or acked replica on a survivor) is marked done from
         the journal and its function is NEVER re-invoked; consumers read
-        the surviving copy (replica fallback) through the catalog."""
+        the surviving copy (replica fallback) through the catalog.
+
+        With ``repair`` (default) the resume first restores the
+        replication factor (``TieredIO.repair``): surviving datasets the
+        loss reduced to a single copy regain an acked buddy before the
+        replay runs, so a SECOND loss during or after the resumed run is
+        still recoverable without replays. The replay decision itself is
+        unchanged by repair (both read the same acks); the repair's
+        object reads are the copies it makes, never probes. Report in
+        ``result.repair_report``."""
         try:
             journal = self.journal(workflow)
         except (IOError, FileNotFoundError):
             journal = {"jobs": {}}
         with self._lock:
             self._workflows.add(workflow)
+        repair_report: dict = {}
+        if repair and lost_nodes and self.tiered is not None:
+            self.tiered.quiesce()  # swallow transfers that died mid-loss
+            repair_report = self.tiered.repair(lost_nodes)
+            self._log("repair",
+                      f"{workflow}: "
+                      f"{len(repair_report.get('repaired', ()))} objects "
+                      f"re-replicated after losing {sorted(lost_nodes)}")
         names = {j.name for j in jobs}
         pre_done: Dict[str, dict] = {}
         replayed: List[str] = []
@@ -478,6 +500,7 @@ class WorkflowScheduler:
         # lost; jobs the journal never recorded as done (new, or failed
         # mid-run) ran too, but they are not loss-driven replays
         result.replayed = sorted(replayed)
+        result.repair_report = repair_report
         return result
 
     # ---- lifecycle ---------------------------------------------------

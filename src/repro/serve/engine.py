@@ -108,3 +108,14 @@ class ServeEngine:
         """Spill idle cached sessions back to pmem (DRAM pressure valve)."""
         assert self.tiered is not None, "eviction needs a TieredIO engine"
         return self.tiered.evict_cold(max_idle_s)
+
+    def repair(self, lost_nodes) -> dict:
+        """Restore the replication factor of spilled session/KV state
+        after a node loss: every ``dlm/serve/...`` object whose acked
+        copies the loss reduced to a single survivor regains a buddy
+        (TieredIO.repair walks dlm/acks.json — no probing). Call from
+        the serving control plane when the cluster monitor reports a
+        dead node; sessions spilled before the loss then survive the
+        NEXT one too."""
+        assert self.tiered is not None, "repair needs a TieredIO engine"
+        return self.tiered.repair(lost_nodes)

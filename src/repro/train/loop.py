@@ -94,6 +94,11 @@ def run(train_step_fn: Callable, params, opt_state,
             restored, manifest = \
                 cluster.checkpointer.restore_latest_recoverable(
                     lost_nodes=[victim])
+            # restore the replication factor before resuming: every
+            # acked shard the victim homed or buddied is down to one
+            # copy, and the CONTINUED run must survive the next loss
+            # too (repair re-replicates + re-acks via the scheduler)
+            cluster.tiered.repair([victim])
             params = jax.tree.map(jax.numpy.asarray, restored["params"])
             opt_state = jax.tree.map(jax.numpy.asarray, restored["opt"])
             state.recovered_at.append(step + 1)

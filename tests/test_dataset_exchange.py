@@ -363,7 +363,10 @@ def test_resume_decision_makes_zero_object_store_probes(cluster):
     victim = cluster.catalog.record("db", "wfZ")["home"]
     cluster.kill_node(victim)
     reads = _record_store_reads(cluster)
-    res = cluster.workflows.resume(jobs, "wfZ", lost_nodes=[victim])
+    # repair=False isolates the DECISION: repair's re-replication reads
+    # the objects it copies (by design — covered in test_repair.py)
+    res = cluster.workflows.resume(jobs, "wfZ", lost_nodes=[victim],
+                                   repair=False)
     assert calls == {"pa": 1, "pb": 1, "sink": 1}  # nothing re-invoked
     assert set(res.skipped) == {"pa", "pb", "sink"}
     assert reads == []

@@ -1,0 +1,398 @@
+"""Ack-driven replica repair: restoring the replication factor after a
+node loss for checkpoint shards, DLM objects and catalog datasets — and
+surviving the SECOND loss that write-time replication alone would not.
+Plus the lease satellites: release tombstones (no resurrection from a
+stale pool copy) and the clock-skew margin in gc()'s expiry check."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dataset_exchange import DatasetCatalog, ack_targets
+
+
+def _tree(seed=0, n=64):
+    return {"x": np.random.RandomState(seed).randn(n).astype(np.float32)}
+
+
+def _record_store_reads(cluster):
+    """Wrap every store's object-read/probe entry points, recording the
+    object names touched. Pool JSON (ack records, catalog records,
+    journals) stays unrecorded — metadata reads are always allowed."""
+    reads = []
+
+    def wrap(st):
+        orig_get, orig_exists = st.get_with_manifest, st.exists
+
+        def get_with_manifest(name, *a, **k):
+            reads.append(name)
+            return orig_get(name, *a, **k)
+
+        def exists(name, *a, **k):
+            reads.append(name)
+            return orig_exists(name, *a, **k)
+        st.get_with_manifest, st.exists = get_with_manifest, exists
+
+    for st in cluster.stores.values():
+        wrap(st)
+    return reads
+
+
+def _ckpt_copies(cluster, step, lost):
+    """Surviving acked copy-holder sets per shard owner at ``step``."""
+    acks = cluster.checkpointer.acks(step)
+    rec = cluster.checkpointer._meta_get_json(
+        f"ckpt/manifest_step{step}.json")
+    out = {}
+    for nid in rec.get("nodes") or cluster.node_ids:
+        holders = set(ack_targets(acks.get(nid, {}).get("replica")))
+        holders.add(nid)
+        out[nid] = holders - set(lost)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# checkpoint repair: one loss + repair -> >= 2 copies -> second loss OK
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_repair_restores_replication_factor(cluster):
+    c = cluster
+    t = _tree(1)
+    c.tiered.save_async(1, t).result(timeout=30)
+    c.tiered.quiesce()  # replicas placed + acked
+    victim = "node1"
+    c.kill_node(victim)
+    # before repair: the victim's shard AND the shard that buddied to
+    # the victim are both down to a single copy
+    assert any(len(h) == 1 for h in
+               _ckpt_copies(c, 1, [victim]).values())
+    report = c.repair([victim])
+    assert report["checkpoint"] == 2  # victim's shard + its buddy's
+    assert not report["errors"] and not report["unrepairable"]
+    # the acceptance criterion: every shard again has >= 2 acked copies
+    for nid, holders in _ckpt_copies(c, 1, [victim]).items():
+        assert len(holders) >= 2, (nid, holders)
+
+
+def test_second_loss_of_new_buddy_still_restores(cluster):
+    """Kill a node, repair, then kill the NEW buddy: the original
+    surviving copy (still in the pruned-and-extended targets list) must
+    carry the restore — decided and served via acks, no walking back."""
+    c = cluster
+    t = _tree(2)
+    c.tiered.save_async(1, t).result(timeout=30)
+    c.tiered.quiesce()
+    victim = "node1"
+    c.kill_node(victim)
+    c.repair([victim])
+    # the victim's shard survived on its old buddy; repair added a new
+    # target on top — kill the new one
+    rec = c.checkpointer.acks(1)[victim]["replica"]
+    new_buddy = rec["target"]
+    survivors = [x for x in rec["targets"] if x != new_buddy]
+    assert survivors, "repair should have kept the original holder"
+    c.kill_node(new_buddy)
+    out, man = c.checkpointer.restore_latest_recoverable(
+        lost_nodes=[victim, new_buddy])
+    assert man["step"] == 1
+    np.testing.assert_array_equal(out["x"], t["x"])
+    # no step was ruled out, none probed blindly
+    assert c.checkpointer.last_restore_stats == \
+        {"skipped_by_ack": 0, "probed": 1}
+
+
+def test_unreplicated_step_is_not_repairs_business(cluster):
+    """An object that never acked a replica promised nothing: repair
+    must not invent copies for it (nor error on it)."""
+    c = cluster
+    c.checkpointer.buddy = False
+    c.tiered.save_async(1, _tree(3)).result(timeout=30)
+    c.tiered.quiesce()
+    report = c.repair(["node1"])
+    assert report["checkpoint"] == 0
+    assert not report["errors"]
+
+
+def test_repair_scan_reads_only_the_copies_it_makes(cluster):
+    """Zero blind probes: every object-store read during repair is the
+    source of a copy actually made — the scan itself decides from ack
+    records and catalog metadata alone."""
+    c = cluster
+    c.tiered.save_async(1, _tree(4)).result(timeout=30)
+    c.tiered.offload("serve/sess", _tree(5)).result(timeout=30)
+    c.catalog.publish("ds", _tree(6), workflow="w")
+    c.tiered.quiesce()
+    c.kill_node("node1")
+    c.tiered.quiesce()
+    reads = _record_store_reads(c)
+    report = c.tiered.repair(["node1"])
+    assert report["repaired"] and not report["errors"]
+    # exactly one source read per repaired object (the copy itself) and
+    # nothing else: the scan never probes the store
+    assert len(reads) == len(report["repaired"]), (reads, report)
+    copied_prefixes = ("ckpt/slot", "replica/", "dlm/", "wf/")
+    for name in reads:
+        assert name.startswith(copied_prefixes), \
+            f"unexpected store read during repair: {name}"
+
+
+def test_repair_skips_slot_reused_steps_on_metadata(cluster):
+    """A step whose shadow slot a newer step reused must be skipped on
+    metadata alone (superseded), not re-replicated with wrong bytes."""
+    c = cluster  # slots=2: step 1's slot is reused by step 3
+    for s in (1, 2, 3):
+        c.tiered.save_async(s, _tree(s)).result(timeout=30)
+    c.tiered.quiesce()
+    c.kill_node("node1")
+    report = c.repair(["node1"])
+    assert report["superseded"] >= 1  # step 1 ruled out by slot reuse
+    assert not report["errors"]
+    for step in (2, 3):
+        for nid, holders in _ckpt_copies(c, step, ["node1"]).items():
+            assert len(holders) >= 2, (step, nid, holders)
+
+
+# ---------------------------------------------------------------------------
+# DLM objects: offload acks, write-back re-acks, repair, second loss
+# ---------------------------------------------------------------------------
+
+def test_offload_records_dlm_ack(cluster):
+    c = cluster
+    c.tiered.offload("serve/sess", _tree(7)).result(timeout=30)
+    c.tiered.quiesce()
+    rec = c.tiered.dlm_acks.objects()["dlm/serve/sess"]
+    assert rec["home"] == "node0"
+    assert rec["targets"] == ["node1"]  # the live-ring buddy, acked
+
+
+def test_dlm_repair_survives_loss_of_new_buddy(cluster):
+    """Home dies -> repair copies the surviving replica to a fresh
+    node -> THAT node dies too -> reads still come from the original
+    holder, which the targets list still records."""
+    c = cluster
+    t = _tree(8)
+    c.tiered.offload("serve/sess", t).result(timeout=30)
+    c.tiered.quiesce()
+    c.kill_node("node0")  # the DLM home
+    report = c.repair(["node0"])
+    surface, obj, survivor, _new = report["repaired"][0]
+    assert (surface, obj, survivor) == ("dlm", "dlm/serve/sess", "node1")
+    rec = c.tiered.dlm_acks.objects()["dlm/serve/sess"]
+    assert len(rec["targets"]) == 2 and "node1" in rec["targets"]
+    new = [x for x in rec["targets"] if x != "node1"][0]
+    c.kill_node(new)
+    c.tiered.evict_cold()  # nothing cached: the read must hit pmem
+    out = c.tiered.fetch("serve/sess")
+    np.testing.assert_array_equal(out["x"], t["x"])
+
+
+def test_dirty_writeback_refreshes_replica(cluster):
+    """A mutated DLM object written back by eviction must re-replicate:
+    after the home dies, the replica serves the NEW bytes, not the ones
+    from the original offload."""
+    c = cluster
+    c.tiered.offload("serve/sess", _tree(9)).result(timeout=30)
+    c.tiered.quiesce()
+    t2 = _tree(10)
+    c.dlm.put("serve/sess", t2)       # mutate in DRAM (dirty)
+    assert c.tiered.evict_cold() >= 1  # write-back fires the hook
+    c.tiered.quiesce()                 # replica + ack land
+    c.kill_node("node0")
+    out = c.tiered.fetch("serve/sess")
+    np.testing.assert_array_equal(out["x"], t2["x"])
+
+
+def test_writeback_ack_replaces_stale_targets(cluster):
+    """A dead buddy that missed the mutation must LEAVE the ack record
+    when the write-back re-replicates: were it still acked, it could
+    rejoin with pre-mutation pmem and serve stale bytes (and fool a
+    later repair into counting it as a healthy copy)."""
+    c = cluster
+    c.tiered.offload("serve/sess", _tree(20)).result(timeout=30)
+    c.tiered.quiesce()
+    assert c.tiered.dlm_acks.targets("dlm/serve/sess") == ["node1"]
+    c.kill_node("node1")  # buddy dies holding the OLD bytes; no repair
+    t2 = _tree(21)
+    c.dlm.put("serve/sess", t2)        # mutate
+    assert c.tiered.evict_cold() >= 1  # write-back -> replica on node2
+    c.tiered.quiesce()
+    # the stale dead target is gone, only the fresh copy is acked
+    assert c.tiered.dlm_acks.targets("dlm/serve/sess") == ["node2"]
+    c.kill_node("node0")
+    out = c.tiered.fetch("serve/sess")
+    np.testing.assert_array_equal(out["x"], t2["x"])
+
+
+def test_offload_replicate_false_objects_stay_node_local(cluster):
+    c = cluster
+    c.tiered.offload("serve/tmp", _tree(11), replicate=False) \
+        .result(timeout=30)
+    c.tiered.evict_cold()
+    c.tiered.quiesce()
+    assert "dlm/serve/tmp" not in c.tiered.dlm_acks.objects()
+    assert not c.stores["node1"].exists("replica/node0/dlm/serve/tmp")
+
+
+# ---------------------------------------------------------------------------
+# datasets: repair + resume with no replays across TWO losses
+# ---------------------------------------------------------------------------
+
+def test_dataset_repair_restores_replication_factor(cluster):
+    c = cluster
+    c.catalog.publish("ds", _tree(12), workflow="w")
+    c.tiered.quiesce()
+    rec = c.catalog.record("ds", "w")
+    home, target = rec["home"], rec["acks"]["replica"]["target"]
+    c.kill_node(home)
+    report = c.repair([home])
+    assert report["dataset"] == 1
+    rec = c.catalog.record("ds", "w")
+    targets = ack_targets(rec["acks"]["replica"])
+    assert target in targets and len(targets) == 2
+    # second loss: the NEW buddy dies; recoverable + readable via the
+    # original holder, decided from the record alone
+    new = [x for x in targets if x != target][0]
+    c.kill_node(new)
+    reads = _record_store_reads(c)
+    assert c.catalog.recoverable("ds", "w", lost_nodes=[home, new])
+    assert reads == []  # metadata-only decision
+    np.testing.assert_array_equal(c.catalog.get("ds", "w")["x"],
+                                  _tree(12)["x"])
+
+
+def _pinned_jobs(cluster, calls):
+    cluster.stores["node0"].put("seed_a", _tree(1))
+    cluster.stores["node2"].put("seed_b", _tree(2))
+    cluster.external.put("seed_a", _tree(1))
+    cluster.external.put("seed_b", _tree(2))
+
+    def mk(tag, out, inputs):
+        def fn(ctx):
+            calls[tag] += 1
+            for i in inputs:
+                ctx.read(i)
+            return {out: _tree(hash(tag) % 100)}
+        return fn
+
+    from repro.core.workflow import JobSpec
+    return [
+        JobSpec("pa", mk("pa", "da", ("seed_a",)), inputs=("seed_a",),
+                retain=("da",)),
+        JobSpec("pb", mk("pb", "db", ("seed_b",)), inputs=("seed_b",),
+                retain=("db",)),
+        JobSpec("sink", mk("sink", "dc", ("da", "db")),
+                inputs=("da", "db"), after=("pa", "pb"), retain=("dc",)),
+    ]
+
+
+def test_resume_repairs_then_second_loss_replays_nothing(cluster):
+    """The acceptance scenario end to end: run, lose a node, resume
+    (repair wired in, zero replays), lose the NEW buddy of a repaired
+    dataset, resume again — still zero replays, decided on acks."""
+    c = cluster
+    calls = {"pa": 0, "pb": 0, "sink": 0}
+    jobs = _pinned_jobs(c, calls)
+    c.workflows.run(jobs, workflow="wfT")
+    c.tiered.quiesce()
+    victim = c.catalog.record("db", "wfT")["home"]
+    c.kill_node(victim)
+    res = c.workflows.resume(jobs, "wfT", lost_nodes=[victim])
+    assert calls == {"pa": 1, "pb": 1, "sink": 1}  # nothing re-invoked
+    assert res.repair_report["dataset"] >= 1
+    # every retained dataset has >= 2 surviving acked copies again
+    survivors = []
+    for name in ("da", "db", "dc"):
+        rec = c.catalog.record(name, "wfT")
+        holders = set(ack_targets(rec["acks"]["replica"]))
+        holders.add(rec["home"])
+        holders -= {victim}
+        assert len(holders) >= 2, (name, holders)
+        survivors.append((name, rec, holders))
+    # second loss: kill a NEW buddy that repair added for db
+    rec = c.catalog.record("db", "wfT")
+    targets = [t for t in ack_targets(rec["acks"]["replica"])
+               if t != victim]
+    second = targets[-1]
+    c.kill_node(second)
+    res2 = c.workflows.resume(jobs, "wfT", lost_nodes=[victim, second])
+    assert calls == {"pa": 1, "pb": 1, "sink": 1}  # STILL no replays
+    assert set(res2.skipped) == {"pa", "pb", "sink"}
+    assert res2.replayed == []
+
+
+def test_failure_recovery_runs_repair(cluster):
+    """check_and_recover restores state AND the replication factor."""
+    c = cluster
+    state = _tree(13)
+    c.tiered.save_async(3, state).result(timeout=30)
+    c.tiered.quiesce()
+    for nid in c.node_ids:
+        c.heartbeat.beat(nid, 3)
+    c.kill_node("node1")
+    tree, manifest, dead = c.recovery.check_and_recover()
+    assert dead == ["node1"]
+    np.testing.assert_array_equal(tree["x"], state["x"])
+    assert c.recovery.last_repair_report["checkpoint"] == 2
+    for nid, holders in _ckpt_copies(c, 3, dead).items():
+        assert len(holders) >= 2
+
+
+# ---------------------------------------------------------------------------
+# satellite: lease release tombstones (no resurrection) + skewed-clock gc
+# ---------------------------------------------------------------------------
+
+def test_released_lease_does_not_resurrect_from_stale_pool(cluster):
+    """A pool that missed the release write holds the lease live; the
+    merge (in a FRESH catalog — cold record cache, as after a process
+    restart) must let the release tombstone win, and gc must reclaim."""
+    cat = cluster.catalog
+    cat.publish("ds", _tree(14), workflow="w", retained=False)
+    lease = cat.acquire("ds", workflow="w", owner="consumer",
+                        ttl_s=3600.0)
+    # snapshot the record WITH the live lease (the stale pool copy)
+    stale = dict(cluster.stores["node2"].pool.get_json("exch/w/ds@v1.json"))
+    cat.release(lease)
+    # node2 "was down" for the release write and rejoins with the stale
+    # copy still holding the lease
+    cluster.stores["node2"].pool.put_json("exch/w/ds@v1.json", stale)
+    fresh = DatasetCatalog(cluster.stores)  # cold cache: must merge
+    assert fresh.refcount("ds", "w") == 0
+    assert fresh.gc() == [("w", "ds", 1)]
+
+
+def test_release_tombstone_pruned_after_expiry(cluster):
+    cat = cluster.catalog
+    cat.publish("ds", _tree(15), workflow="w", retained=True)
+    lease = cat.acquire("ds", workflow="w", owner="c", ttl_s=30.0)
+    cat.release(lease)
+    cat.gc()  # unexpired tombstone survives the sweep (still guarding)
+    rec = cat.record("ds", "w")
+    assert rec["leases"][lease.lease_id]["released"]
+    # once safely past expiry + skew, the tombstone is pruned: any
+    # stale live copy is expired by then, so nothing can resurrect
+    cat.gc(now=time.time() + 30.0 + cat.clock_skew_s + 1.0)
+    assert cat.record("ds", "w")["leases"] == {}
+
+
+def test_gc_skew_margin_defers_reclaim(cluster):
+    """A lease just past ITS producer's expiry must survive gc on a
+    consumer whose clock may be ahead — until the skew margin passes."""
+    cat = DatasetCatalog(cluster.stores, clock_skew_s=5.0)
+    cat.publish("ds", _tree(16), workflow="w", retained=False)
+    cat.acquire("ds", workflow="w", owner="c", ttl_s=10.0)
+    t0 = time.time()
+    # locally "expired", but within the skew margin: NOT reclaimed
+    assert cat.gc(now=t0 + 11.0) == []
+    assert not cat.record("ds", "w")["reclaimed"]
+    # past expiry + margin: reclaimed
+    assert cat.gc(now=t0 + 16.0) == [("w", "ds", 1)]
+
+
+def test_gc_skew_configurable_per_call(cluster):
+    cat = DatasetCatalog(cluster.stores, clock_skew_s=60.0)
+    cat.publish("ds", _tree(17), workflow="w", retained=False)
+    cat.acquire("ds", workflow="w", owner="c", ttl_s=10.0)
+    t0 = time.time()
+    assert cat.gc(now=t0 + 20.0) == []          # default margin holds
+    assert cat.gc(now=t0 + 20.0, skew_s=0.0) == \
+        [("w", "ds", 1)]                        # explicit override
