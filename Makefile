@@ -6,7 +6,7 @@ PY ?= python
 SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast bench lint hygiene repair-smoke
+.PHONY: verify test-fast bench lint hygiene repair-smoke daemon-smoke
 
 # `time` prefix: suite duration is surfaced wherever verify runs,
 # including the GitHub Actions log (CI calls these targets).
@@ -24,6 +24,13 @@ bench:
 # loss fully recoverable with zero blind probes (CI runs this).
 repair-smoke:
 	$(PY) benchmarks/bench_repair.py --smoke
+
+# continuous-repair-daemon smoke: the daemon's single-copy window must
+# be shorter than the recovery-point-only baseline, the sweep must make
+# zero blind object probes, and drain-only shards must rehydrate back
+# into pmem (drain_only == 0). CI runs this.
+daemon-smoke:
+	$(PY) benchmarks/bench_repair_daemon.py --smoke
 
 # fail on tracked bytecode: .gitignore stops NEW __pycache__/.pyc adds,
 # but nothing caught files already committed — CI runs this too.

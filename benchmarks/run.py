@@ -18,9 +18,9 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_checkpoint, bench_io_scaling,
                             bench_kernels, bench_repair,
-                            bench_replication, bench_staging,
-                            bench_tiered_io, bench_tiering,
-                            bench_workflow)
+                            bench_repair_daemon, bench_replication,
+                            bench_staging, bench_tiered_io,
+                            bench_tiering, bench_workflow)
     suites = {
         "io_scaling": bench_io_scaling.run,       # paper Table I
         "checkpoint": bench_checkpoint.run,       # async/delta claims (§V.8)
@@ -30,6 +30,7 @@ def main(argv=None) -> None:
         "replication": bench_replication.run,     # ack-ranked recovery
         "workflow": bench_workflow.run,           # dataset exchange (§V-A)
         "repair": bench_repair.run,               # replication-factor repair
+        "repair_daemon": bench_repair_daemon.run,  # single-copy window
         "kernels": bench_kernels.run,
     }
     print("name,us_per_call,derived")

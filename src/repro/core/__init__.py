@@ -9,6 +9,6 @@ from repro.core.object_store import DistributedStore, PMemObjectStore
 from repro.core.pmem import PMemPool, PMemRegion
 from repro.core.resilience import (FailureRecovery, Heartbeat,
                                    StragglerDetector)
-from repro.core.tiered_io import SaveTicket, TieredIO
+from repro.core.tiered_io import RepairDaemon, SaveTicket, TieredIO
 from repro.core.tiering import DLMCache, SLMTier, TieredKVCache
 from repro.core.workflow import JobSpec, WorkflowScheduler

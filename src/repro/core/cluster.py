@@ -58,6 +58,19 @@ class SimCluster:
                                            tiered=self.tiered,
                                            catalog=self.catalog)
 
+    def start_repair_daemon(self, **kw):
+        """Start the continuous background repair daemon (owned by the
+        FailureRecovery monitor): node deaths detected via heartbeats
+        trigger incremental, rate-limited repair sweeps — including
+        drain-tier rehydration — WITHOUT waiting for a recovery point.
+        ``kill_node`` is the matching fault-injection hook: the daemon
+        notices the unreachable pool on its next poll. Returns the
+        daemon (``wait_for``/``covers``/``report`` are its ledger)."""
+        return self.recovery.start_daemon(**kw)
+
+    def stop_repair_daemon(self) -> None:
+        self.recovery.stop_daemon()
+
     def kill_node(self, nid: str) -> None:
         """Simulate a node failure: its pmem becomes unreachable."""
         import shutil
@@ -72,7 +85,7 @@ class SimCluster:
             time.sleep(0.02)
         # monitor sees it dead because heartbeats stop / are gone
 
-    def repair(self, lost_nodes) -> dict:
+    def repair(self, lost_nodes, **kw) -> dict:
         """Restore the replication factor after ``kill_node``: quiesce
         in-flight I/O (a replicate that died with the node must not be
         mistaken for pending work), then re-replicate every acked
@@ -81,8 +94,9 @@ class SimCluster:
         automatically; this is the standalone entry point for tests,
         benchmarks and operator tooling."""
         self.tiered.quiesce()
-        return self.tiered.repair(lost_nodes)
+        return self.tiered.repair(lost_nodes, **kw)
 
     def shutdown(self) -> None:
+        self.recovery.stop_daemon()
         self.tiered.shutdown()
         self.scheduler.shutdown()

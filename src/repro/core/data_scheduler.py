@@ -146,11 +146,21 @@ class DataScheduler:
 
     # ---- public channels ----
     def stage_in(self, nid: str, external_name: str, obj_name: str,
-                 version: int = 0, priority: int = 0) -> Future:
+                 version: int = 0, priority: int = 0,
+                 meta: Optional[dict] = None,
+                 on_complete: Optional[Callable[[Any], None]] = None
+                 ) -> Future:
+        """External -> pmem pre-load. ``meta`` stamps the staged object
+        (drain-tier rehydration stages a checkpoint shard back and must
+        carry its step tag so restore's slot-reuse check still holds);
+        ``on_complete`` runs inside the task once the pmem copy is
+        durable — same ack discipline as replicate/drain."""
         def go():
             tree = self.external.get(external_name)
-            man = self.stores[nid].put(obj_name, tree, version)
+            man = self.stores[nid].put(obj_name, tree, version, meta=meta)
             self.stats[nid]["staged_in"] += man["nbytes"]
+            if on_complete is not None:
+                on_complete(man)
             return man
         return self._submit(nid, go, priority)
 

@@ -9,13 +9,17 @@ hook the training loop can use.
 
 ``FailureRecovery`` glues it together: dead node -> restore from buddy
 replicas -> elastic restart on the survivors (checkpoint.restore handles
-re-sharding).
+re-sharding). The monitor loop also OWNS the continuous ``RepairDaemon``
+(``start_daemon``/``stop_daemon``): the daemon shrinks the single-copy
+window by repairing in the background between recovery points, and
+``check_and_recover`` consults its already-repaired ledger instead of
+re-scanning from scratch.
 """
 from __future__ import annotations
 
 import statistics
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Set
 
 from repro.core.checkpoint import DistributedCheckpointer
 from repro.core.object_store import PMemObjectStore
@@ -24,6 +28,12 @@ from repro.core.object_store import PMemObjectStore
 class Heartbeat:
     def __init__(self, stores: Dict[str, PMemObjectStore]):
         self.stores = stores
+        # monitor-side first-seen clock per node that has NOT yet written
+        # a heartbeat: a just-joined / just-restarted node must get a
+        # grace window before the monitor declares it dead and repairs
+        # around it. State lives in the monitor (this object), never in
+        # the observed node's pmem.
+        self._first_seen: Dict[str, float] = {}
 
     def beat(self, nid: str, step: int) -> None:
         try:
@@ -38,13 +48,37 @@ class Heartbeat:
         except (FileNotFoundError, IOError):
             return None
 
-    def dead_nodes(self, timeout_s: float, now: Optional[float] = None
-                   ) -> List[str]:
+    def dead_nodes(self, timeout_s: float, now: Optional[float] = None,
+                   grace_s: Optional[float] = None) -> List[str]:
+        """Nodes the monitor considers dead: pool unreachable, heartbeat
+        older than ``timeout_s``, or — for a node that has never beaten —
+        first seen by THIS monitor more than ``grace_s`` (default
+        ``timeout_s``) ago. The grace window exists because a freshly
+        joined or restarted node has a reachable pool but no heartbeat
+        record yet; declaring it dead on sight would trigger a spurious
+        repair sweep around a healthy node."""
         now = now or time.time()
+        grace = timeout_s if grace_s is None else grace_s
         dead = []
         for nid in self.stores:
-            hb = self.read(nid)
-            if hb is None or now - hb["ts"] > timeout_s:
+            pool = self.stores[nid].pool
+            if not getattr(pool, "alive", True):
+                dead.append(nid)  # pmem unreachable: unambiguously dead
+                continue
+            try:
+                hb = pool.get_json("hb/heartbeat.json")
+            except FileNotFoundError:
+                hb = None  # pool reachable, node just never beat (yet)
+            except IOError:
+                dead.append(nid)
+                continue
+            if hb is not None:
+                self._first_seen.pop(nid, None)
+                if now - hb["ts"] > timeout_s:
+                    dead.append(nid)
+                continue
+            first = self._first_seen.setdefault(nid, now)
+            if now - first > grace:
                 dead.append(nid)
         return dead
 
@@ -62,6 +96,13 @@ class StragglerDetector:
         hist.append(step_seconds)
         del hist[:-self.window]
 
+    def forget(self, nid: str) -> None:
+        """Drop a removed node's history. A dead node's stale step times
+        would otherwise keep skewing the fleet median forever — slow
+        final steps from the victim can flag healthy survivors, and a
+        fast victim deflates the median the survivors are judged by."""
+        self._times.pop(nid, None)
+
     def stragglers(self) -> List[str]:
         if len(self._times) < 2:
             return []
@@ -74,11 +115,13 @@ class StragglerDetector:
 
 class FailureRecovery:
     def __init__(self, ckpt: DistributedCheckpointer, hb: Heartbeat,
-                 timeout_s: float = 10.0, tiered=None):
+                 timeout_s: float = 10.0, tiered=None,
+                 straggler: Optional[StragglerDetector] = None):
         self.ckpt = ckpt
         self.hb = hb
         self.timeout_s = timeout_s
         self.tiered = tiered          # Optional[TieredIO]
+        self.straggler = straggler    # forgotten on node loss, if given
         self.inflight_errors: List[Exception] = []
         # how the last recovery picked its step: {"skipped_by_ack": n,
         # "probed": m} — steps ruled out on the manifest ack map alone
@@ -87,6 +130,34 @@ class FailureRecovery:
         # the last recovery's RepairChannel report: every acked object
         # the loss reduced to a single copy, re-replicated + re-acked
         self.last_repair_report: dict = {}
+        # dead nodes already restored+repaired: check_and_recover in a
+        # polling loop must act on NEW deaths only, not re-restore the
+        # same dead set forever (the daemon runs it in exactly that loop)
+        self._handled_dead: Set[str] = set()
+        # the continuous repair daemon, owned by this monitor
+        self.daemon = None
+        self.daemon_wait_s = 60.0
+
+    # ---- continuous repair daemon (owned by the monitor loop) --------
+    def start_daemon(self, *, poll_s: float = 0.05, max_inflight: int = 2,
+                     priority: int = 4, **kw):
+        """Start the background ``RepairDaemon`` on this monitor's
+        heartbeat + TieredIO engine. Recovery points then consult the
+        daemon's already-repaired ledger instead of re-scanning."""
+        assert self.tiered is not None, "daemon needs a TieredIO engine"
+        if self.daemon is None:
+            from repro.core.tiered_io import RepairDaemon
+            self.daemon = RepairDaemon(
+                self.tiered, self.hb, timeout_s=self.timeout_s,
+                poll_s=poll_s, max_inflight=max_inflight,
+                priority=priority, **kw)
+            self.tiered.repair_daemon = self.daemon
+        self.daemon.start()
+        return self.daemon
+
+    def stop_daemon(self) -> None:
+        if self.daemon is not None:
+            self.daemon.stop()
 
     def quiesce_inflight(self) -> List[Exception]:
         """Consume every in-flight TieredIO future before reading the
@@ -101,11 +172,14 @@ class FailureRecovery:
 
     def check_and_recover(self, now: Optional[float] = None,
                           repair: bool = True):
-        """Returns None if healthy, else (restored_tree, manifest,
-        dead_nodes) — restored from the newest checkpoint whose ack map
-        marks it recoverable for the dead set (steps that died between
-        commit and replica ack are skipped on metadata alone), with dead
-        nodes' shards served by their buddies.
+        """Returns None if healthy OR if every currently-dead node was
+        already handled by a previous call (this method runs in a loop
+        under the monitor/daemon — the same loss must trigger exactly
+        one restore/repair, not one per poll), else (restored_tree,
+        manifest, dead_nodes) — restored from the newest checkpoint
+        whose ack map marks it recoverable for the dead set (steps that
+        died between commit and replica ack are skipped on metadata
+        alone), with dead nodes' shards served by their buddies.
 
         With ``repair`` (default) the recovery then restores the
         replication factor: every acked checkpoint shard / dataset / DLM
@@ -113,10 +187,19 @@ class FailureRecovery:
         re-replicated to a fresh live buddy and re-acked
         (``TieredIO.repair``; report in ``last_repair_report``) — so the
         resumed run tolerates the NEXT node loss too, instead of running
-        on silently-single copies."""
+        on silently-single copies. When the continuous RepairDaemon is
+        running and its ledger already covers the dead set, its merged
+        report is used instead of a redundant re-scan."""
         dead = self.hb.dead_nodes(self.timeout_s, now)
-        if not dead:
+        # a node that rejoined (no longer dead) may die again later and
+        # must then be handled afresh
+        self._handled_dead &= set(dead)
+        new = [n for n in dead if n not in self._handled_dead]
+        if not new:
             return None
+        if self.straggler is not None:
+            for nid in new:
+                self.straggler.forget(nid)
         self.quiesce_inflight()
         if self.ckpt.latest_step() is None:
             raise RuntimeError(f"nodes {dead} dead and no checkpoint exists")
@@ -125,5 +208,25 @@ class FailureRecovery:
         self.last_restore_stats = dict(self.ckpt.last_restore_stats)
         self.last_repair_report = {}
         if repair and self.tiered is not None:
-            self.last_repair_report = self.tiered.repair(dead)
+            daemon = self.daemon or getattr(self.tiered, "repair_daemon",
+                                            None)
+            report = None
+            if daemon is not None:
+                if daemon.running:
+                    daemon.wait_for(dead, timeout=self.daemon_wait_s)
+                if daemon.covers(dead):
+                    report = daemon.report()  # ledger: already repaired
+            if report is None:
+                report = self.tiered.repair(dead)
+                # transient copy failures (e.g. a transfer racing the
+                # loss) are collected, not raised; since this dead set
+                # is about to be marked handled — no later poll will
+                # retry it — re-run the sweep now (re-planning from the
+                # current acks) before accepting residual errors
+                for _ in range(2):
+                    if not report.get("errors"):
+                        break
+                    report = self.tiered.repair(dead)
+            self.last_repair_report = report
+        self._handled_dead |= set(dead)
         return tree, manifest, dead

@@ -95,6 +95,43 @@ overwritten since its ack (checkpoint slot reuse) raises the benign
 ``SupersededError`` and is skipped. After ``repair``, every previously
 acked object again tolerates any single node loss, and recovery after a
 SECOND loss still decides from acks alone.
+
+Continuous repair daemon and drain-tier rehydration
+---------------------------------------------------
+Recovery-point repair still leaves a WINDOW: between a node loss and the
+next ``check_and_recover``/``resume``, every object the loss touched
+sits on a single pmem copy. ``RepairDaemon`` closes it:
+
+  * **Single-copy window**: the daemon polls ``Heartbeat.dead_nodes``
+    every ``poll_s`` and sweeps on each NEW death, so the window shrinks
+    from "until the next recovery point" to roughly one poll interval
+    plus the (rate-limited) repair makespan
+    (``benchmarks/bench_repair_daemon.py`` measures both). Sweeps are
+    incremental — an already-handled death never re-triggers — and a
+    membership change mid-sweep re-plans the cumulative dead set from
+    the acks on the next poll (the persisted ``targets`` lists make
+    re-planning idempotent and safe).
+  * **Rehydration**: a checkpoint shard whose pmem copies ALL died but
+    whose acked external drain survives (``drain_only``) is staged back
+    from the external tier into a live pmem pool under its replica
+    name, re-replicated to a second live node, and re-acked — restoring
+    fast-tier redundancy, not just external survivability. The scan
+    stays metadata-only: the ONLY external reads are the rehydration
+    sources, and each ack is written only after its copy is durable
+    (a crash between the two stages leaves a truthful single-target
+    ack the next sweep extends).
+  * **Rate limiting**: repair transfers run at a background scheduler
+    priority (below stage-in/drain/replicate/compute) and at most
+    ``max_inflight`` of them are queued/running at once, so a repair
+    storm after a loss never swamps foreground saves or serving I/O
+    (the report's ``peak_inflight`` records the high-water mark; the
+    bench measures foreground step-time overhead under a storm).
+  * **Ledger**: ``covers(lost)`` / ``report()`` let recovery points
+    (``FailureRecovery.check_and_recover``,
+    ``WorkflowScheduler.resume``, ``ServeEngine.repair``) reuse the
+    daemon's already-completed sweeps instead of re-scanning from
+    scratch; the daemon never quiesces foreground work, which is safe
+    because acks only ever describe already-durable transfers.
 """
 from __future__ import annotations
 
@@ -102,7 +139,7 @@ import collections
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.core.checkpoint import DistributedCheckpointer
 from repro.core.data_scheduler import DataScheduler, SupersededError
@@ -285,15 +322,18 @@ class ExchangeChannel:
     def submit(self, src: str, obj: str, dst: str, *, version: int = 0,
                dst_name: Optional[str] = None,
                expect_meta: Optional[dict] = None,
-               on_ack=None) -> Future:
+               on_ack=None, priority: int = 2) -> Future:
         """``dst_name`` overrides the replica name — repair copies a
         surviving replica ``replica/<home>/<obj>`` from its HOLDER, so
         the destination name must keep the original home, not the
-        holder, or reads would never find it."""
+        holder, or reads would never find it. ``priority`` passes
+        through to the scheduler (the repair daemon runs at background
+        priority so foreground I/O outranks it)."""
         fut = self.scheduler.replicate(src, obj, dst, version=version,
                                        dst_name=dst_name,
                                        expect_meta=expect_meta,
-                                       on_complete=on_ack)
+                                       on_complete=on_ack,
+                                       priority=priority)
         if self._track is not None:
             self._track(fut)
         return fut
@@ -455,45 +495,110 @@ class RepairChannel:
             return None
         return survivor, new, sorted((set(targets) - lost) | {new})
 
+    def _rehydrate_target(self, nid: str, live: Sequence[str],
+                          exclude: Set[str]) -> Optional[str]:
+        """Where a rehydrated shard of dead node ``nid`` should land:
+        the first live node after ``nid``'s position in the full ring
+        (same rotation as ``buddy_of``/``_new_target``, so rehydration
+        load spreads instead of piling onto one node)."""
+        ckpt = self.tiered.checkpointer
+        ring = ckpt.nodes if ckpt is not None else sorted(live)
+        i = ring.index(nid) if nid in ring else 0
+        for k in range(1, len(ring) + 1):
+            cand = ring[(i + k) % len(ring)]
+            if cand in live and cand not in exclude:
+                return cand
+        return None
+
     # ---- the scan ----------------------------------------------------
-    def repair(self, lost_nodes: Sequence[str]) -> dict:
+    def repair(self, lost_nodes: Sequence[str], *,
+               max_inflight: Optional[int] = None,
+               priority: Optional[int] = None,
+               rehydrate: bool = True) -> dict:
         """Scan + re-replicate + join. Returns a report:
         ``checkpoint``/``dataset``/``dlm`` count completed re-acked
         copies, ``repaired`` lists them as (surface, object, survivor,
-        new_target), ``healthy`` objects that still have >= 2 surviving
+        new_target), ``rehydrated`` counts drain-tier rehydrations
+        (checkpoint shards with zero surviving pmem copies staged back
+        from the acked external drain and re-replicated to a live
+        buddy), ``healthy`` objects that still have >= 2 surviving
         acked copies (nothing to do), ``superseded`` sources overwritten
         since their ack (benign — the newer object carries its own
         acks), ``unrepairable`` objects with no surviving pmem copy or
         no live node left to host a new one (``drain_only`` the subset
-        an acked external drain still covers), ``skipped`` single-copy
-        objects that never acked a replica (repair does not own them),
-        and ``errors`` real copy failures."""
+        an acked external drain still covers but that was NOT
+        rehydrated), ``skipped`` single-copy objects that never acked a
+        replica (repair does not own them), and ``errors`` real copy
+        failures.
+
+        ``max_inflight`` is the repair-traffic budget: at most that many
+        repair transfers are queued/running at once, the rest wait — the
+        continuous daemon uses it so a repair storm never swamps
+        foreground I/O (``peak_inflight`` in the report records the high
+        water mark). ``priority`` overrides the scheduler priority of
+        every repair task (the daemon passes a background priority so
+        foreground saves/stage-ins always outrank repairs). Plans run in
+        newest-checkpoint-first order. ``rehydrate=False`` disables the
+        drain-tier path (drain-only objects are then only counted)."""
         lost = set(lost_nodes)
-        report = {"checkpoint": 0, "dataset": 0, "dlm": 0, "healthy": 0,
-                  "superseded": 0, "unrepairable": 0, "drain_only": 0,
-                  "skipped": 0, "repaired": [], "errors": []}
+        report = {"checkpoint": 0, "dataset": 0, "dlm": 0,
+                  "rehydrated": 0, "healthy": 0, "superseded": 0,
+                  "unrepairable": 0, "drain_only": 0, "skipped": 0,
+                  "peak_inflight": 0, "repaired": [], "errors": []}
         live = self._live(lost)
-        futs: List[Tuple[str, str, str, str, Future]] = []
+        plans: collections.deque = collections.deque()
         if self.tiered.checkpointer is not None:
-            self._scan_checkpoints(lost, live, report, futs)
-        self._scan_dlm(lost, live, report, futs)
+            self._scan_checkpoints(lost, live, report, plans,
+                                   priority=priority, rehydrate=rehydrate)
+        self._scan_dlm(lost, live, report, plans, priority=priority)
         if self.tiered.catalog is not None:
-            self._scan_datasets(lost, live, report, futs)
-        for surface, obj, survivor, new, fut in futs:
+            self._scan_datasets(lost, live, report, plans,
+                                priority=priority)
+        self._execute(plans, report, max_inflight)
+        return report
+
+    def _execute(self, plans: "collections.deque", report: dict,
+                 max_inflight: Optional[int]) -> None:
+        """Run repair plans through a bounded submission window.
+        Each plan: {surface, obj, survivor, new, submit, then?,
+        on_error?}. ``then`` chains a follow-up plan on success
+        (rehydration stages external->pmem, THEN replicates pmem->pmem);
+        it re-enters at the FRONT of the queue so a chain completes
+        before new objects start. Completion of a plan without ``then``
+        is what the per-surface counters and ``repaired`` record."""
+        outstanding: collections.deque = collections.deque()
+        while plans or outstanding:
+            while plans and (max_inflight is None
+                             or len(outstanding) < max_inflight):
+                p = plans.popleft()
+                outstanding.append((p, p["submit"]()))
+                report["peak_inflight"] = max(report["peak_inflight"],
+                                              len(outstanding))
+            p, fut = outstanding.popleft()
             try:
                 fut.result()
             except SupersededError:
                 report["superseded"] += 1
             except Exception as e:  # noqa: BLE001 — reported, not raised
                 report["errors"].append(e)
+                if p.get("on_error") is not None:
+                    p["on_error"](e)
             else:
-                report[surface] += 1
-                report["repaired"].append((surface, obj, survivor, new))
-        return report
+                then = p.get("then")
+                if then is not None:
+                    plans.appendleft(then)
+                    continue
+                report[p["counter"]] += 1
+                report["repaired"].append(
+                    (p["surface"], p["obj"], p["survivor"], p["new"]))
 
     def _scan_checkpoints(self, lost: Set[str], live: List[str],
-                          report: dict, futs: List) -> None:
+                          report: dict, plans: "collections.deque", *,
+                          priority: Optional[int],
+                          rehydrate: bool) -> None:
         ckpt = self.tiered.checkpointer
+        sched = self.tiered.scheduler
+        prio = {} if priority is None else {"priority": priority}
         seen_slots: Set[int] = set()
         for step in sorted(ckpt.available_steps(), reverse=True):
             try:
@@ -505,7 +610,10 @@ class RepairChannel:
             if slot in seen_slots:
                 # a newer step reused this slot: the bytes on pmem are
                 # no longer this step's (its own replicate would only
-                # raise SupersededError) — skip on metadata alone
+                # raise SupersededError) — skip on metadata alone. The
+                # same holds for rehydration: the replica name is keyed
+                # by slot, so staging the old step back would collide
+                # with the newer step's replicas.
                 report["superseded"] += 1
                 continue
             seen_slots.add(slot)
@@ -514,10 +622,20 @@ class RepairChannel:
             obj = f"ckpt/slot{slot}"
             for nid in ring:
                 targets = ack_targets(acks.get(nid, {}).get("replica"))
+                drain_rec = acks.get(nid, {}).get("drain") \
+                    if ckpt.external is not None else None
+                if rehydrate and drain_rec and \
+                        not (({nid} | set(targets)) - lost):
+                    # drain-tier rehydration: every pmem copy died, the
+                    # acked external drain survives — stage it back into
+                    # a live pool (the only external read this scan
+                    # makes), then re-replicate to a fresh buddy
+                    self._plan_rehydration(step, nid, slot, drain_rec,
+                                           live, report, plans, prio)
+                    continue
                 plan = self._plan(
                     nid, targets, lost, live, report,
-                    drain_ok=bool(acks.get(nid, {}).get("drain")
-                                  and ckpt.external is not None))
+                    drain_ok=bool(drain_rec))
                 if plan is None:
                     continue
                 survivor, new, new_targets = plan
@@ -529,18 +647,81 @@ class RepairChannel:
                     ckpt.record_ack(step, nid, "replica",
                                     {"target": new,
                                      "targets": new_targets})
-                futs.append(("checkpoint", f"step{step}/{nid}", survivor,
-                             new, self.tiered.scheduler.replicate(
-                                 survivor, src_obj, new,
-                                 dst_name=f"replica/{nid}/{obj}",
-                                 expect_meta={"step": step},
-                                 on_complete=ack)))
+                plans.append({"surface": "checkpoint",
+                              "counter": "checkpoint",
+                              "obj": f"step{step}/{nid}",
+                              "survivor": survivor, "new": new,
+                              "submit": lambda s=survivor, so=src_obj,
+                              n=new, st=step, ni=nid, a=ack, o=obj:
+                              sched.replicate(
+                                  s, so, n, dst_name=f"replica/{ni}/{o}",
+                                  expect_meta={"step": st},
+                                  on_complete=a, **prio)})
+
+    def _plan_rehydration(self, step: int, nid: str, slot: int,
+                          drain_rec: dict, live: List[str], report: dict,
+                          plans: "collections.deque",
+                          prio: dict) -> None:
+        """Queue the two-stage rehydration of ``nid``'s shard at
+        ``step``: (1) stage the acked external drained copy into a live
+        pool under the replica name (acked immediately — one durable
+        pmem copy), (2) replicate that staged copy to a second live node
+        and re-ack the pair. Either stage failing counts the object as
+        ``unrepairable``/``drain_only`` (the drain still covers it), and
+        a later sweep re-plans from whatever the acks then say."""
+        ckpt = self.tiered.checkpointer
+        sched = self.tiered.scheduler
+        t1 = self._rehydrate_target(nid, live, set())
+        if t1 is None:
+            report["unrepairable"] += 1
+            report["drain_only"] += 1
+            return
+        t2 = self._rehydrate_target(nid, live, {t1})
+        ext = drain_rec.get("external") or f"ckpt_step{step}_{nid}"
+        rep = f"replica/{nid}/ckpt/slot{slot}"
+        obj = f"step{step}/{nid}"
+
+        def count_lost(_e) -> None:
+            report["unrepairable"] += 1
+            report["drain_only"] += 1
+
+        def ack_stage(_man, targets=(t1,)) -> None:
+            # the staged pmem copy is durable: ack it alone first —
+            # under-promise, so a crash between the stages leaves a
+            # truthful single-target record the next sweep extends
+            ckpt.record_ack(step, nid, "replica",
+                            {"target": t1, "targets": sorted(targets)})
+
+        stage = {"surface": "rehydrate", "counter": "rehydrated",
+                 "obj": obj, "survivor": "external", "new": t1,
+                 "on_error": count_lost,
+                 "submit": lambda: sched.stage_in(
+                     t1, ext, rep,
+                     meta={"step": step, "replica_of": nid},
+                     on_complete=ack_stage, **prio)}
+        if t2 is not None:
+            def ack_pair(_man) -> None:
+                ckpt.record_ack(step, nid, "replica",
+                                {"target": t2,
+                                 "targets": sorted((t1, t2))})
+            stage["then"] = {
+                "surface": "rehydrate", "counter": "rehydrated",
+                "obj": obj, "survivor": "external", "new": t1,
+                "on_error": count_lost,
+                "submit": lambda: sched.replicate(
+                    t1, rep, t2, dst_name=rep,
+                    expect_meta={"step": step},
+                    on_complete=ack_pair, **prio)}
+        plans.append(stage)
 
     def _scan_dlm(self, lost: Set[str], live: List[str],
-                  report: dict, futs: List) -> None:
+                  report: dict, plans: "collections.deque", *,
+                  priority: Optional[int]) -> None:
         reg = self.tiered.dlm_acks
         if reg is None:
             return
+        sched = self.tiered.scheduler
+        prio = {} if priority is None else {"priority": priority}
         for name, rec in reg.objects().items():
             home = rec.get("home")
             targets = ack_targets(rec)
@@ -554,15 +735,19 @@ class RepairChannel:
             def ack(_man, name=name, home=home, new=new,
                     new_targets=new_targets) -> None:
                 reg.record(name, home, new, targets=new_targets)
-            futs.append(("dlm", name, survivor, new,
-                         self.tiered.scheduler.replicate(
-                             survivor, src_obj, new,
-                             dst_name=f"replica/{home}/{name}",
-                             on_complete=ack)))
+            plans.append({"surface": "dlm", "counter": "dlm",
+                          "obj": name, "survivor": survivor, "new": new,
+                          "submit": lambda s=survivor, so=src_obj, n=new,
+                          h=home, nm=name, a=ack: sched.replicate(
+                              s, so, n, dst_name=f"replica/{h}/{nm}",
+                              on_complete=a, **prio)})
 
     def _scan_datasets(self, lost: Set[str], live: List[str],
-                       report: dict, futs: List) -> None:
+                       report: dict, plans: "collections.deque", *,
+                       priority: Optional[int]) -> None:
         catalog = self.tiered.catalog
+        sched = self.tiered.scheduler
+        prio = {} if priority is None else {"priority": priority}
         for rec in catalog.records():
             if rec.get("reclaimed"):
                 continue
@@ -575,6 +760,7 @@ class RepairChannel:
             wf, name, v = rec["workflow"], rec["name"], rec["version"]
             src_obj = rec["object"] if survivor == home else \
                 f"replica/{home}/{rec['object']}"
+            dst_name = f"replica/{home}/{rec['object']}"
 
             def ack(_man, wf=wf, name=name, v=v, new=new,
                     new_targets=new_targets) -> None:
@@ -582,19 +768,200 @@ class RepairChannel:
                                           targets=new_targets)
             chan = self.tiered.exchange
             key = f"exch/{wf}/{name}@v{v}"
-            if chan is not None:
-                fut = chan.submit(
-                    survivor, src_obj, new, version=v,
-                    dst_name=f"replica/{home}/{rec['object']}",
+
+            def submit(survivor=survivor, src_obj=src_obj, new=new,
+                       v=v, name=name, dst_name=dst_name, ack=ack,
+                       chan=chan) -> Future:
+                if chan is not None:
+                    return chan.submit(
+                        survivor, src_obj, new, version=v,
+                        dst_name=dst_name,
+                        expect_meta={"dataset": name, "version": v},
+                        on_ack=ack, **prio)
+                return sched.replicate(
+                    survivor, src_obj, new, version=v, dst_name=dst_name,
                     expect_meta={"dataset": name, "version": v},
-                    on_ack=ack)
+                    on_complete=ack, **prio)
+            plans.append({"surface": "dataset", "counter": "dataset",
+                          "obj": key, "survivor": survivor, "new": new,
+                          "submit": submit})
+
+
+def _merge_sweep(acc: dict, sweep: dict) -> None:
+    """Fold one sweep's report into the daemon's accumulated ledger.
+    Event counters (copies made, rehydrations, supersedes, errors,
+    repaired entries) accumulate across sweeps; STATE counters
+    (healthy / unrepairable / drain_only / skipped) are the LAST
+    sweep's values — every sweep re-scans all three ack surfaces
+    against the cumulative dead set, so the newest scan is the current
+    truth (an object sweep N rehydrated must not keep an old sweep's
+    ``drain_only`` count alive)."""
+    for k in ("checkpoint", "dataset", "dlm", "rehydrated",
+              "superseded"):
+        acc[k] = acc.get(k, 0) + sweep.get(k, 0)
+    for k in ("healthy", "unrepairable", "drain_only", "skipped"):
+        acc[k] = sweep.get(k, 0)
+    acc["peak_inflight"] = max(acc.get("peak_inflight", 0),
+                               sweep.get("peak_inflight", 0))
+    acc.setdefault("repaired", []).extend(sweep.get("repaired", ()))
+    acc.setdefault("errors", []).extend(sweep.get("errors", ()))
+
+
+class RepairDaemon:
+    """Continuous, heartbeat-driven background repair sweeps.
+
+    PR 4's repair runs only at recovery points (``check_and_recover`` /
+    ``resume``), so an object sits on a single pmem copy for the whole
+    window between a node loss and the next recovery event. The daemon
+    closes that window: it polls ``Heartbeat.dead_nodes`` and, on every
+    NEW death, runs ``RepairChannel.repair`` over the CUMULATIVE dead
+    set — incrementally (already-handled deaths don't re-trigger),
+    rate-limited (``max_inflight`` bounds concurrent repair transfers;
+    ``priority`` puts them below every foreground channel in the
+    scheduler queues), newest-checkpoint-first, and with drain-tier
+    rehydration on. It quiesces nothing: repair decisions come from
+    persisted acks, which are only ever written after a transfer is
+    durable, so the sweep coexists with in-flight foreground I/O.
+
+    A second loss mid-sweep simply fails the transfers aimed at the
+    newly-dead node; the next poll sees an unhandled death and
+    re-plans the whole cumulative set from the acks (PR 4's ``targets``
+    lists make the re-plan safe). Error-only sweeps retry up to
+    ``max_retries`` times before the dead set is marked handled with
+    the errors kept in the ledger.
+
+    The **ledger**: ``covers(lost)`` says whether every node in
+    ``lost`` has been swept cleanly, and ``report()`` returns the
+    merged accumulated report — recovery points
+    (``FailureRecovery.check_and_recover``,
+    ``WorkflowScheduler.resume``, ``ServeEngine.repair``) consult it
+    instead of re-scanning from scratch. ``wait_for(lost)`` blocks
+    until the ledger covers ``lost`` (the train loop's fault hook uses
+    it to resume only after the replication factor is back)."""
+
+    def __init__(self, tiered: "TieredIO", heartbeat, *,
+                 timeout_s: float = 10.0, poll_s: float = 0.05,
+                 max_inflight: int = 2, priority: int = 4,
+                 max_retries: int = 3, rehydrate: bool = True):
+        self.tiered = tiered
+        self.hb = heartbeat
+        self.timeout_s = timeout_s
+        self.poll_s = poll_s
+        self.max_inflight = max_inflight
+        self.priority = priority
+        self.max_retries = max_retries
+        self.rehydrate = rehydrate
+        self.handled: Set[str] = set()
+        self._attempts: Dict[frozenset, int] = {}
+        self._ledger: dict = {"sweeps": 0}
+        self._cv = threading.Condition()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ---- lifecycle ---------------------------------------------------
+    @property
+    def running(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    def start(self) -> "RepairDaemon":
+        if self.running:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="repair-daemon")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        t = self._thread
+        if t is not None:
+            t.join(timeout=60.0)
+            if t.is_alive():
+                # a wedged sweep survived the join timeout: keep the
+                # thread visible (running stays True) so a later
+                # start() cannot spawn a SECOND daemon racing this one
+                # on the ledger; the stop flag ends it when it unwedges
+                return
+            self._thread = None
+
+    def _run(self) -> None:
+        backoff = self.poll_s
+        while not self._stop.is_set():
+            try:
+                self.poll_once()
+                backoff = self.poll_s
+            except Exception as e:  # noqa: BLE001 — daemon must survive
+                # a sweep that RAISES (vs per-object errors, which the
+                # report collects) means even the metadata scan failed;
+                # back off exponentially so a dead cluster doesn't fill
+                # the ledger at poll rate
+                with self._cv:
+                    self._ledger.setdefault("errors", []).append(e)
+                backoff = min(backoff * 2, 1.0)
+            self._stop.wait(backoff)
+
+    # ---- one poll/sweep (also the unit tests' entry point) -----------
+    def poll_once(self, now: Optional[float] = None) -> Optional[dict]:
+        """Detect new deaths and sweep if any; returns that sweep's
+        report, or None when nothing new happened. Runs inline on the
+        caller's thread — the background loop is just this on a timer."""
+        dead = set(self.hb.dead_nodes(self.timeout_s, now))
+        with self._cv:
+            # a rejoined node may die again later: it leaves the
+            # handled set the moment it stops being dead
+            self.handled &= dead
+            new = dead - self.handled
+        if not new:
+            return None
+        sweep = self.tiered.repair(sorted(dead),
+                                   max_inflight=self.max_inflight,
+                                   priority=self.priority,
+                                   rehydrate=self.rehydrate)
+        key = frozenset(dead)
+        with self._cv:
+            _merge_sweep(self._ledger, sweep)
+            self._ledger["sweeps"] += 1
+            if not sweep["errors"]:
+                self.handled |= dead
+                self._attempts.clear()
             else:
-                fut = self.tiered.scheduler.replicate(
-                    survivor, src_obj, new, version=v,
-                    dst_name=f"replica/{home}/{rec['object']}",
-                    expect_meta={"dataset": name, "version": v},
-                    on_complete=ack)
-            futs.append(("dataset", key, survivor, new, fut))
+                # transfers died mid-sweep (e.g. a SECOND loss): leave
+                # the set unhandled so the next poll re-plans from the
+                # acks — but give up after max_retries so a permanent
+                # failure doesn't storm the scheduler forever
+                self._attempts[key] = self._attempts.get(key, 0) + 1
+                if self._attempts.get(key, 0) >= self.max_retries:
+                    self.handled |= dead
+            self._cv.notify_all()
+        return sweep
+
+    # ---- the ledger --------------------------------------------------
+    def covers(self, lost_nodes: Sequence[str]) -> bool:
+        """True when every node in ``lost_nodes`` has been swept: a
+        recovery point may then take ``report()`` instead of running a
+        redundant scan of its own."""
+        with self._cv:
+            return set(lost_nodes) <= self.handled
+
+    def wait_for(self, lost_nodes: Sequence[str],
+                 timeout: Optional[float] = None) -> bool:
+        """Block until the ledger covers ``lost_nodes`` (or timeout)."""
+        lost = set(lost_nodes)
+        with self._cv:
+            return self._cv.wait_for(lambda: lost <= self.handled,
+                                     timeout)
+
+    def report(self) -> dict:
+        """The accumulated ledger: merged sweep reports plus ``sweeps``
+        (count) and ``handled`` (nodes swept cleanly)."""
+        with self._cv:
+            out = dict(self._ledger)
+            out["repaired"] = list(self._ledger.get("repaired", ()))
+            out["errors"] = list(self._ledger.get("errors", ()))
+            out["handled"] = sorted(self.handled)
+            return out
 
 
 class TieredIO:
@@ -626,6 +993,10 @@ class TieredIO:
         # over all three ack surfaces
         self.dlm_acks: Optional[DLMAckRegistry] = None
         self.repair_channel = RepairChannel(self)
+        # the continuous RepairDaemon, when one is running against this
+        # engine (FailureRecovery.start_daemon wires it): recovery
+        # points consult its ledger instead of re-scanning
+        self.repair_daemon: Optional[RepairDaemon] = None
         # dlm/<name>s the caller opted out of replicating (offload
         # replicate=False): dirty write-backs skip them too
         self._dlm_no_replicate: Set[str] = set()
@@ -969,14 +1340,19 @@ class TieredIO:
         return fut
 
     # ---- repair channel (restore the replication factor) -------------
-    def repair(self, lost_nodes: Sequence[str]) -> dict:
+    def repair(self, lost_nodes: Sequence[str], **kw) -> dict:
         """Re-replicate every acked object (checkpoint shard, dataset,
         DLM object) whose copies ``lost_nodes`` reduced to a single
-        survivor, to a fresh live buddy — re-acked when durable. Joins
-        the copies; returns the RepairChannel report. Call after the
-        recovery path has quiesced in-flight work (FailureRecovery and
-        WorkflowScheduler.resume do this wiring for you)."""
-        return self.repair_channel.repair(lost_nodes)
+        survivor, to a fresh live buddy — re-acked when durable — and
+        rehydrate drain-only checkpoint shards back into pmem. Joins
+        the copies; returns the RepairChannel report (kwargs —
+        ``max_inflight``, ``priority``, ``rehydrate`` — pass through).
+        Call after the recovery path has quiesced in-flight work
+        (FailureRecovery and WorkflowScheduler.resume do this wiring
+        for you); the continuous RepairDaemon calls it WITHOUT
+        quiescing, which is safe because acks only ever describe
+        already-durable transfers."""
+        return self.repair_channel.repair(lost_nodes, **kw)
 
     # ---- burst-buffer channel (external -> pmem) ---------------------
     def stage_in(self, nid: str, names: Sequence[str],

@@ -459,8 +459,11 @@ class WorkflowScheduler:
         replay runs, so a SECOND loss during or after the resumed run is
         still recoverable without replays. The replay decision itself is
         unchanged by repair (both read the same acks); the repair's
-        object reads are the copies it makes, never probes. Report in
-        ``result.repair_report``."""
+        object reads are the copies it makes, never probes. When the
+        continuous RepairDaemon is running and its ledger already covers
+        ``lost_nodes``, its merged report is used instead of a redundant
+        re-scan (the daemon repaired in the background between the loss
+        and this resume). Report in ``result.repair_report``."""
         try:
             journal = self.journal(workflow)
         except (IOError, FileNotFoundError):
@@ -469,12 +472,27 @@ class WorkflowScheduler:
             self._workflows.add(workflow)
         repair_report: dict = {}
         if repair and lost_nodes and self.tiered is not None:
-            self.tiered.quiesce()  # swallow transfers that died mid-loss
-            repair_report = self.tiered.repair(lost_nodes)
-            self._log("repair",
-                      f"{workflow}: "
-                      f"{len(repair_report.get('repaired', ()))} objects "
-                      f"re-replicated after losing {sorted(lost_nodes)}")
+            # swallow foreground transfers that died with the node in
+            # EITHER branch: a failed future left tracked would fail a
+            # later strict join() on a successfully-resumed run
+            self.tiered.quiesce()
+            daemon = getattr(self.tiered, "repair_daemon", None)
+            if daemon is not None and daemon.running:
+                daemon.wait_for(lost_nodes, timeout=60.0)
+            if daemon is not None and daemon.covers(lost_nodes):
+                repair_report = daemon.report()
+                self._log("repair",
+                          f"{workflow}: daemon ledger covers "
+                          f"{sorted(lost_nodes)} "
+                          f"({repair_report.get('sweeps', 0)} sweeps) — "
+                          f"no re-scan")
+            else:
+                repair_report = self.tiered.repair(lost_nodes)
+                self._log(
+                    "repair",
+                    f"{workflow}: "
+                    f"{len(repair_report.get('repaired', ()))} objects "
+                    f"re-replicated after losing {sorted(lost_nodes)}")
         names = {j.name for j in jobs}
         pre_done: Dict[str, dict] = {}
         replayed: List[str] = []

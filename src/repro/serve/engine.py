@@ -116,6 +116,15 @@ class ServeEngine:
         (TieredIO.repair walks dlm/acks.json — no probing). Call from
         the serving control plane when the cluster monitor reports a
         dead node; sessions spilled before the loss then survive the
-        NEXT one too."""
+        NEXT one too. When the continuous RepairDaemon is running, its
+        sweep is joined (bounded wait) and its ledger report returned —
+        an inline scan concurrent with a mid-sweep daemon would double
+        every repair transfer, exactly the storm the daemon's rate
+        limit exists to prevent."""
         assert self.tiered is not None, "repair needs a TieredIO engine"
+        daemon = getattr(self.tiered, "repair_daemon", None)
+        if daemon is not None and daemon.running:
+            daemon.wait_for(lost_nodes, timeout=60.0)
+        if daemon is not None and daemon.covers(lost_nodes):
+            return daemon.report()
         return self.tiered.repair(lost_nodes)

@@ -30,6 +30,11 @@ class LoopConfig:
     delta_ckpt: bool = False     # incremental checkpoints vs last full
     drain_every: int = 0         # 0 = drain only at the end
     heartbeat_node: str = "node0"
+    # run the continuous RepairDaemon alongside training: node losses
+    # are repaired in the background (rate-limited below foreground
+    # I/O) instead of waiting for the fault hook / next recovery point
+    repair_daemon: bool = False
+    daemon_poll_s: float = 0.02
 
 
 @dataclass
@@ -54,55 +59,79 @@ def run(train_step_fn: Callable, params, opt_state,
     sd = StragglerDetector()
     last_full = None
     last_ticket = None
-    for step, batch in enumerate(batches):
-        t0 = time.time()
-        params, opt_state, metrics = train_step_fn(params, opt_state, batch)
-        loss = float(metrics["loss"])
-        state.losses.append(loss)
-        state.step = step + 1
-        dt = time.time() - t0
-        for nid in cluster.node_ids:
-            cluster.heartbeat.beat(nid, step)
-            sd.record(nid, dt)
-        if (step + 1) % loop_cfg.ckpt_every == 0:
-            # fail fast: a checkpoint that failed to COMMIT must surface
-            # now, not after hours of unprotected training
-            cluster.tiered.raise_if_failed()
+    dead_nodes: set = set()
+    daemon = cluster.start_repair_daemon(poll_s=loop_cfg.daemon_poll_s) \
+        if loop_cfg.repair_daemon else None
+    try:
+        for step, batch in enumerate(batches):
             t0 = time.time()
-            host_state = {"params": jax.tree.map(np.asarray, params),
-                          "opt": jax.tree.map(np.asarray, opt_state)}
-            base = last_full if loop_cfg.delta_ckpt else None
-            last_ticket = cluster.tiered.save_async(
-                step + 1, host_state, base_step=base,
-                drain=bool(loop_cfg.drain_every))
-            if not loop_cfg.delta_ckpt or last_full is None:
-                last_full = step + 1
-            # what the step pays: the submit (+ any slot backpressure)
-            state.ckpt_seconds.append(time.time() - t0)
-        if fault_at is not None and step + 1 == fault_at:
-            # simulate node loss at a replication-quiescent point: join
-            # in-flight saves/replicas BEFORE the kill so the hook
-            # deterministically exercises buddy recovery. (A failure
-            # landing inside the replication window instead loses the
-            # un-replicated tail; restore_latest_recoverable walks back
-            # to the newest fully-replicated checkpoint in that case.)
-            # Going through recovery.quiesce_inflight records any
-            # swallowed errors on the recovery object for forensics.
-            cluster.recovery.quiesce_inflight()
-            victim = cluster.node_ids[-1]
-            cluster.kill_node(victim)
-            restored, manifest = \
-                cluster.checkpointer.restore_latest_recoverable(
-                    lost_nodes=[victim])
-            # restore the replication factor before resuming: every
-            # acked shard the victim homed or buddied is down to one
-            # copy, and the CONTINUED run must survive the next loss
-            # too (repair re-replicates + re-acks via the scheduler)
-            cluster.tiered.repair([victim])
-            params = jax.tree.map(jax.numpy.asarray, restored["params"])
-            opt_state = jax.tree.map(jax.numpy.asarray, restored["opt"])
-            state.recovered_at.append(step + 1)
-            fault_at = None
+            params, opt_state, metrics = \
+                train_step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            state.losses.append(loss)
+            state.step = step + 1
+            dt = time.time() - t0
+            for nid in cluster.node_ids:
+                if nid in dead_nodes:
+                    continue  # a forgotten victim must STAY forgotten:
+                    # recording it again would re-skew the fleet median
+                cluster.heartbeat.beat(nid, step)
+                sd.record(nid, dt)
+            if (step + 1) % loop_cfg.ckpt_every == 0:
+                # fail fast: a checkpoint that failed to COMMIT must
+                # surface now, not after hours of unprotected training
+                cluster.tiered.raise_if_failed()
+                t0 = time.time()
+                host_state = {"params": jax.tree.map(np.asarray, params),
+                              "opt": jax.tree.map(np.asarray, opt_state)}
+                base = last_full if loop_cfg.delta_ckpt else None
+                last_ticket = cluster.tiered.save_async(
+                    step + 1, host_state, base_step=base,
+                    drain=bool(loop_cfg.drain_every))
+                if not loop_cfg.delta_ckpt or last_full is None:
+                    last_full = step + 1
+                # what the step pays: the submit (+ slot backpressure)
+                state.ckpt_seconds.append(time.time() - t0)
+            if fault_at is not None and step + 1 == fault_at:
+                # simulate node loss at a replication-quiescent point:
+                # join in-flight saves/replicas BEFORE the kill so the
+                # hook deterministically exercises buddy recovery. (A
+                # failure landing inside the replication window instead
+                # loses the un-replicated tail;
+                # restore_latest_recoverable walks back to the newest
+                # fully-replicated checkpoint in that case.) Going
+                # through recovery.quiesce_inflight records any
+                # swallowed errors on the recovery object for forensics.
+                cluster.recovery.quiesce_inflight()
+                victim = cluster.node_ids[-1]
+                # the victim's stale step times must not keep skewing
+                # the fleet median the survivors are judged by
+                sd.forget(victim)
+                dead_nodes.add(victim)
+                cluster.kill_node(victim)
+                restored, manifest = \
+                    cluster.checkpointer.restore_latest_recoverable(
+                        lost_nodes=[victim])
+                # restore the replication factor before resuming: every
+                # acked shard the victim homed or buddied is down to
+                # one copy, and the CONTINUED run must survive the next
+                # loss too. With the daemon running, the sweep already
+                # started in the background — join its ledger; a sweep
+                # that cannot converge in time (or no daemon) falls
+                # back to an inline repair, because continuing on
+                # single copies would break the durability promise.
+                if daemon is None or \
+                        not daemon.wait_for([victim], timeout=60.0):
+                    cluster.tiered.repair([victim])
+                params = jax.tree.map(jax.numpy.asarray,
+                                      restored["params"])
+                opt_state = jax.tree.map(jax.numpy.asarray,
+                                         restored["opt"])
+                state.recovered_at.append(step + 1)
+                fault_at = None
+    finally:
+        if daemon is not None:
+            cluster.stop_repair_daemon()
     # clean shutdown: strict barrier — a run whose checkpoints silently
     # all failed must not report success
     cluster.tiered.join()

@@ -1,0 +1,457 @@
+"""Continuous repair daemon + drain-tier rehydration: the single-copy
+window between recovery points is closed by a heartbeat-driven
+background sweep (rate-limited below foreground I/O), and a checkpoint
+shard whose pmem copies all died comes back into the fast tier from its
+acked external drain. Plus the monitor satellites: heartbeat first-seen
+grace, new-deaths-only check_and_recover, straggler forget."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dataset_exchange import ack_targets
+from repro.core.resilience import StragglerDetector
+from repro.core.workflow import JobSpec
+
+
+def _tree(seed=0, n=64):
+    return {"x": np.random.RandomState(seed).randn(n).astype(np.float32)}
+
+
+def _beat_all(cluster, step=1):
+    for nid in cluster.node_ids:
+        cluster.heartbeat.beat(nid, step)
+
+
+def _ckpt_copies(cluster, step, lost):
+    """Surviving acked copy-holder sets per shard owner at ``step``."""
+    acks = cluster.checkpointer.acks(step)
+    rec = cluster.checkpointer._meta_get_json(
+        f"ckpt/manifest_step{step}.json")
+    out = {}
+    for nid in rec.get("nodes") or cluster.node_ids:
+        holders = set(ack_targets(acks.get(nid, {}).get("replica")))
+        holders.add(nid)
+        out[nid] = holders - set(lost)
+    return out
+
+
+def _record_store_reads(cluster):
+    """Wrap every store's object-read/probe entry points, recording the
+    object names touched. Pool JSON (ack records, catalog records,
+    heartbeats) stays unrecorded — metadata reads are always allowed."""
+    reads = []
+
+    def wrap(st):
+        orig_get, orig_exists = st.get_with_manifest, st.exists
+
+        def get_with_manifest(name, *a, **k):
+            reads.append(name)
+            return orig_get(name, *a, **k)
+
+        def exists(name, *a, **k):
+            reads.append(name)
+            return orig_exists(name, *a, **k)
+        st.get_with_manifest, st.exists = get_with_manifest, exists
+
+    for st in cluster.stores.values():
+        wrap(st)
+    return reads
+
+
+# ---------------------------------------------------------------------------
+# satellite: heartbeat first-seen grace window
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_grace_for_unbeaten_node(cluster):
+    """A node that has never written a heartbeat is NOT dead on sight:
+    the monitor gives it a first-seen grace window (a just-joined or
+    just-restarted node must not get repaired-around before it ever
+    beats). After the window expires unbeaten, it IS dead."""
+    hb = cluster.heartbeat
+    t0 = time.time()
+    assert hb.dead_nodes(30.0, now=t0, grace_s=1.0) == []
+    hb.beat("node0", 1)
+    assert hb.dead_nodes(30.0, now=t0 + 0.5, grace_s=1.0) == []
+    dead = hb.dead_nodes(30.0, now=t0 + 2.0, grace_s=1.0)
+    assert dead == ["node1", "node2", "node3"]  # node0 beat in time
+
+
+def test_heartbeat_grace_cleared_by_first_beat(cluster):
+    hb = cluster.heartbeat
+    t0 = time.time()
+    hb.dead_nodes(30.0, now=t0, grace_s=1.0)  # first-seen clocks start
+    _beat_all(cluster)
+    assert hb.dead_nodes(30.0, now=t0 + 5.0, grace_s=1.0) == []
+
+
+def test_heartbeat_dead_pool_bypasses_grace(cluster):
+    """An unreachable pmem pool is unambiguously dead — the grace
+    window never hides a real node loss."""
+    t0 = time.time()
+    cluster.heartbeat.dead_nodes(30.0, now=t0, grace_s=30.0)
+    cluster.kill_node("node1")
+    assert cluster.heartbeat.dead_nodes(
+        30.0, now=t0 + 0.01, grace_s=30.0) == ["node1"]
+
+
+# ---------------------------------------------------------------------------
+# satellite: check_and_recover acts on NEW deaths only
+# ---------------------------------------------------------------------------
+
+def test_check_and_recover_only_new_deaths(cluster):
+    """Polling check_and_recover in a loop (as the daemon's monitor
+    does) must restore/repair each loss exactly once, not once per
+    poll — and a later NEW death must trigger again with the full
+    cumulative dead set."""
+    c = cluster
+    t = _tree(1)
+    c.tiered.save_async(1, t).result(timeout=30)
+    c.tiered.quiesce()
+    _beat_all(c)
+    c.kill_node("node1")
+    rec = c.recovery.check_and_recover()
+    assert rec is not None and rec[2] == ["node1"]
+    assert c.recovery.check_and_recover() is None  # same dead set
+    assert c.recovery.check_and_recover() is None
+    c.kill_node("node2")
+    rec2 = c.recovery.check_and_recover()  # new death re-triggers
+    assert rec2 is not None and set(rec2[2]) == {"node1", "node2"}
+    np.testing.assert_array_equal(rec2[0]["x"], t["x"])
+
+
+# ---------------------------------------------------------------------------
+# satellite: straggler detector forgets removed nodes
+# ---------------------------------------------------------------------------
+
+def test_straggler_detector_forget():
+    sd = StragglerDetector(threshold=1.5)
+    for _ in range(4):
+        sd.record("slow", 10.0)
+        sd.record("a", 1.0)
+        sd.record("b", 1.0)
+    assert sd.stragglers() == ["slow"]
+    sd.forget("slow")  # node removed: stale times must stop skewing
+    assert sd.stragglers() == []
+    sd.forget("slow")  # idempotent on unknown/already-forgotten nodes
+
+
+def test_straggler_forget_unskews_median():
+    """A DEAD fast node's stale times deflate the fleet median and can
+    flag a healthy (merely average) survivor forever; forget fixes."""
+    sd = StragglerDetector(threshold=1.5)
+    for _ in range(4):
+        sd.record("fast_dead", 0.1)
+        sd.record("fast_dead2", 0.1)
+        sd.record("a", 1.0)
+        sd.record("b", 1.1)
+    assert "b" in sd.stragglers()  # skewed by the dead pair
+    sd.forget("fast_dead")
+    sd.forget("fast_dead2")
+    assert sd.stragglers() == []
+
+
+# ---------------------------------------------------------------------------
+# the daemon: repair BEFORE any recovery point
+# ---------------------------------------------------------------------------
+
+def test_daemon_restores_rf_before_recovery_point(cluster):
+    """Kill a node with the daemon running and never call
+    check_and_recover/resume: the replication factor comes back anyway,
+    driven purely by the heartbeat sweep."""
+    c = cluster
+    c.tiered.save_async(1, _tree(1)).result(timeout=30)
+    c.tiered.quiesce()
+    _beat_all(c)
+    daemon = c.start_repair_daemon(poll_s=0.01)
+    c.kill_node("node1")
+    assert daemon.wait_for(["node1"], timeout=30)
+    report = daemon.report()
+    assert report["checkpoint"] == 2  # victim's shard + its buddy's
+    assert not report["errors"]
+    assert report["handled"] == ["node1"]
+    for nid, holders in _ckpt_copies(c, 1, ["node1"]).items():
+        assert len(holders) >= 2, (nid, holders)
+
+
+def test_daemon_idempotent_across_polls(cluster):
+    """An already-handled death must not re-trigger sweeps on every
+    poll: after convergence the sweep count stays put."""
+    c = cluster
+    c.tiered.save_async(1, _tree(2)).result(timeout=30)
+    c.tiered.quiesce()
+    _beat_all(c)
+    daemon = c.start_repair_daemon(poll_s=0.005)
+    c.kill_node("node1")
+    assert daemon.wait_for(["node1"], timeout=30)
+    sweeps = daemon.report()["sweeps"]
+    time.sleep(0.1)  # ~20 more polls
+    assert daemon.report()["sweeps"] == sweeps
+
+
+# ---------------------------------------------------------------------------
+# drain-tier rehydration: back into pmem from the external drain
+# ---------------------------------------------------------------------------
+
+def test_drain_rehydration_returns_shard_to_pmem(cluster):
+    """Kill every pmem holder of a drained shard: repair stages the
+    acked external copy back into a live pool, re-replicates it to a
+    fresh buddy and re-acks the pair — drain_only reaches 0."""
+    c = cluster
+    t = _tree(3)
+    c.tiered.save_async(1, t, drain=True).result(timeout=30)
+    c.tiered.quiesce()
+    # node1's shard lives on node1 (home) + node2 (ring buddy): kill both
+    c.kill_node("node1")
+    c.kill_node("node2")
+    report = c.repair(["node1", "node2"])
+    assert report["rehydrated"] == 1
+    assert report["drain_only"] == 0 and report["unrepairable"] == 0
+    assert not report["errors"]
+    targets = ack_targets(c.checkpointer.acks(1)["node1"]["replica"])
+    assert targets == ["node0", "node3"]  # two LIVE pmem copies again
+    # the bytes really are back in the fast tier: restore reads pmem
+    # replicas, newest step, no walking back, no blind probes
+    out, man = c.checkpointer.restore_latest_recoverable(
+        lost_nodes=["node1", "node2"])
+    assert man["step"] == 1
+    np.testing.assert_array_equal(out["x"], t["x"])
+    assert c.checkpointer.last_restore_stats == \
+        {"skipped_by_ack": 0, "probed": 1}
+
+
+def test_rehydration_disabled_counts_drain_only(cluster):
+    """rehydrate=False preserves the PR 4 accounting: the drain-covered
+    object is reported, not acted on (the baseline the bench compares
+    against)."""
+    c = cluster
+    c.tiered.save_async(1, _tree(4), drain=True).result(timeout=30)
+    c.tiered.quiesce()
+    c.kill_node("node1")
+    c.kill_node("node2")
+    report = c.repair(["node1", "node2"], rehydrate=False)
+    assert report["rehydrated"] == 0
+    assert report["drain_only"] == 1 and report["unrepairable"] >= 1
+
+
+def test_rehydration_scan_zero_blind_probes(cluster):
+    """The rehydrating scan stays metadata-only: every store read is
+    the source of a copy actually made (the staged shard feeding its
+    new buddy, or a surviving replica being re-replicated) — the only
+    external reads are the rehydration sources."""
+    c = cluster
+    c.tiered.save_async(1, _tree(5), drain=True).result(timeout=30)
+    c.tiered.quiesce()
+    c.kill_node("node1")
+    c.kill_node("node2")
+    c.tiered.quiesce()
+    reads = _record_store_reads(c)
+    ext_reads = []
+    orig_ext_get = c.external.get
+    c.external.get = lambda name: (ext_reads.append(name),
+                                   orig_ext_get(name))[1]
+    report = c.repair(["node1", "node2"])
+    assert report["rehydrated"] == 1 and not report["errors"]
+    # one source read per copy made (incl. the staged shard read once
+    # to place its buddy), nothing probed
+    assert len(reads) == len(report["repaired"]), (reads, report)
+    for name in reads:
+        assert name.startswith(("ckpt/slot", "replica/", "dlm/", "wf/")), \
+            f"unexpected store read during repair: {name}"
+    # the single external read is the rehydration source
+    assert ext_reads == ["ckpt_step1_node1"]
+
+
+def test_daemon_rehydrates_drain_only_to_zero(cluster):
+    """The acceptance criterion: a double loss strips a drained shard
+    of every pmem copy BEFORE the daemon can intervene; once the daemon
+    runs, the report converges to drain_only == 0 via rehydration (a
+    recovery point never fires)."""
+    c = cluster
+    c.tiered.save_async(1, _tree(6), drain=True).result(timeout=30)
+    c.tiered.quiesce()
+    _beat_all(c)
+    c.kill_node("node1")
+    c.kill_node("node2")  # node1's shard: home + buddy gone, drain left
+    daemon = c.start_repair_daemon(poll_s=0.01)
+    assert daemon.wait_for(["node1", "node2"], timeout=30)
+    report = daemon.report()
+    assert report["rehydrated"] >= 1
+    assert report["drain_only"] == 0
+    for nid, holders in _ckpt_copies(c, 1, ["node1", "node2"]).items():
+        assert len(holders) >= 2, (nid, holders)
+
+
+def test_daemon_sequential_losses_converge(cluster):
+    """Losses the daemon handles one at a time never become drain-only
+    at all: each sweep restores the replication factor before the next
+    loss lands, so the accumulated report still ends at drain_only == 0
+    without needing the external tier."""
+    c = cluster
+    c.tiered.save_async(1, _tree(8), drain=True).result(timeout=30)
+    c.tiered.quiesce()
+    _beat_all(c)
+    daemon = c.start_repair_daemon(poll_s=0.01)
+    c.kill_node("node1")
+    assert daemon.wait_for(["node1"], timeout=30)
+    c.kill_node("node2")
+    assert daemon.wait_for(["node1", "node2"], timeout=30)
+    report = daemon.report()
+    assert report["drain_only"] == 0
+    for nid, holders in _ckpt_copies(c, 1, ["node1", "node2"]).items():
+        assert len(holders) >= 2, (nid, holders)
+
+
+# ---------------------------------------------------------------------------
+# second loss mid-sweep: re-plan from the acks
+# ---------------------------------------------------------------------------
+
+def test_second_loss_mid_sweep_replans(cluster):
+    """A membership change while a sweep is running fails some of its
+    transfers; the next poll re-plans the cumulative dead set from the
+    persisted targets lists and converges — every acked object ends
+    with >= 2 surviving copies (or rehydrated from drain)."""
+    c = cluster
+    c.tiered.save_async(1, _tree(7), drain=True).result(timeout=30)
+    for k in range(6):
+        c.tiered.offload(f"serve/s{k}", _tree(10 + k)).result(timeout=30)
+    c.tiered.quiesce()
+    _beat_all(c)
+    # max_inflight=1 stretches the sweep so the second kill lands mid-way
+    daemon = c.start_repair_daemon(poll_s=0.005, max_inflight=1)
+    c.kill_node("node1")
+    c.kill_node("node2")
+    assert daemon.wait_for(["node1", "node2"], timeout=60)
+    lost = {"node1", "node2"}
+    for nid, holders in _ckpt_copies(c, 1, lost).items():
+        assert len(holders) >= 2, (nid, holders)
+    for name, rec in c.tiered.dlm_acks.objects().items():
+        holders = ({rec["home"]} | set(ack_targets(rec))) - lost
+        assert len(holders) >= 2, (name, rec)
+    out, man = c.checkpointer.restore_latest_recoverable(
+        lost_nodes=sorted(lost))
+    assert man["step"] == 1
+    np.testing.assert_array_equal(out["x"], _tree(7)["x"])
+
+
+# ---------------------------------------------------------------------------
+# rate limiting: the token/backlog budget bounds repair concurrency
+# ---------------------------------------------------------------------------
+
+def test_rate_limiter_bounds_concurrent_repair_tasks(cluster):
+    c = cluster
+    for k in range(8):
+        c.tiered.offload(f"serve/s{k}", _tree(20 + k)).result(timeout=30)
+    c.tiered.quiesce()
+    c.kill_node("node0")  # DLM home: all 8 objects need repair
+    c.tiered.quiesce()
+    outstanding = []
+    peak = [0]
+    orig = c.scheduler.replicate
+
+    def tracked(*a, **k):
+        fut = orig(*a, **k)
+        outstanding.append(fut)
+        peak[0] = max(peak[0],
+                      sum(1 for f in outstanding if not f.done()))
+        return fut
+    c.scheduler.replicate = tracked
+    report = c.tiered.repair(["node0"], max_inflight=2)
+    assert report["dlm"] == 8 and not report["errors"]
+    assert report["peak_inflight"] <= 2
+    assert peak[0] <= 2, f"budget exceeded: {peak[0]} concurrent tasks"
+
+
+def test_repair_runs_at_background_priority(cluster):
+    """priority passes through to the scheduler so daemon repairs rank
+    below every foreground channel."""
+    c = cluster
+    c.tiered.offload("serve/s", _tree(30)).result(timeout=30)
+    c.tiered.quiesce()
+    c.kill_node("node0")
+    c.tiered.quiesce()
+    prios = []
+    orig = c.scheduler.replicate
+
+    def tracked(*a, **k):
+        prios.append(k.get("priority", 2))
+        return orig(*a, **k)
+    c.scheduler.replicate = tracked
+    report = c.tiered.repair(["node0"], priority=4)
+    assert report["dlm"] == 1
+    assert prios and all(p == 4 for p in prios)
+
+
+# ---------------------------------------------------------------------------
+# recovery points consult the daemon's ledger instead of re-scanning
+# ---------------------------------------------------------------------------
+
+def test_resume_consults_daemon_ledger(cluster):
+    c = cluster
+    calls = {"n": 0}
+
+    def fn(ctx):
+        calls["n"] += 1
+        return {"da": _tree(40)}
+    jobs = [JobSpec("p", fn, retain=("da",))]
+    c.workflows.run(jobs, workflow="wfD")
+    c.tiered.quiesce()
+    _beat_all(c)
+    victim = c.catalog.record("da", "wfD")["home"]
+    daemon = c.start_repair_daemon(poll_s=0.01)
+    c.kill_node(victim)
+    assert daemon.wait_for([victim], timeout=30)
+    n_rescans = {"n": 0}
+    orig = c.tiered.repair
+
+    def counted(*a, **k):
+        n_rescans["n"] += 1
+        return orig(*a, **k)
+    c.tiered.repair = counted
+    res = c.workflows.resume(jobs, "wfD", lost_nodes=[victim])
+    assert n_rescans["n"] == 0  # ledger used, no fresh scan
+    assert res.repair_report.get("sweeps", 0) >= 1
+    assert calls["n"] == 1 and res.replayed == []  # and no replays
+    rec = c.catalog.record("da", "wfD")
+    holders = ({rec["home"]} | set(ack_targets(
+        rec["acks"]["replica"]))) - {victim}
+    assert len(holders) >= 2
+
+
+def test_check_and_recover_uses_daemon_ledger(cluster):
+    c = cluster
+    state = _tree(41)
+    c.tiered.save_async(2, state).result(timeout=30)
+    c.tiered.quiesce()
+    _beat_all(c, step=2)
+    daemon = c.start_repair_daemon(poll_s=0.01)
+    c.kill_node("node1")
+    assert daemon.wait_for(["node1"], timeout=30)
+    n_rescans = {"n": 0}
+    orig = c.tiered.repair
+
+    def counted(*a, **k):
+        n_rescans["n"] += 1
+        return orig(*a, **k)
+    c.tiered.repair = counted
+    tree, manifest, dead = c.recovery.check_and_recover()
+    assert dead == ["node1"]
+    np.testing.assert_array_equal(tree["x"], state["x"])
+    assert n_rescans["n"] == 0
+    assert c.recovery.last_repair_report.get("sweeps", 0) >= 1
+    assert c.recovery.last_repair_report["checkpoint"] == 2
+
+
+def test_serve_repair_uses_daemon_ledger(cluster):
+    from repro.serve.engine import ServeEngine
+    c = cluster
+    c.tiered.offload("serve/sess", _tree(42)).result(timeout=30)
+    c.tiered.quiesce()
+    _beat_all(c)
+    daemon = c.start_repair_daemon(poll_s=0.01)
+    c.kill_node("node0")
+    assert daemon.wait_for(["node0"], timeout=30)
+    eng = ServeEngine.__new__(ServeEngine)  # wiring-only: no model
+    eng.tiered = c.tiered
+    report = eng.repair(["node0"])
+    assert report.get("sweeps", 0) >= 1 and report["dlm"] >= 1
