@@ -6,7 +6,7 @@ PY ?= python
 SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast bench lint hygiene repair-smoke daemon-smoke
+.PHONY: verify test-fast bench lint hygiene repair-smoke daemon-smoke metalog-smoke
 
 # `time` prefix: suite duration is surfaced wherever verify runs,
 # including the GitHub Actions log (CI calls these targets).
@@ -31,6 +31,12 @@ repair-smoke:
 # into pmem (drain_only == 0). CI runs this.
 daemon-smoke:
 	$(PY) benchmarks/bench_repair_daemon.py --smoke
+
+# metadata-log smoke: appends must beat whole-map JSON rewrites >= 5x
+# at 10k objects, and a post-compaction cold replay must read < 2x the
+# snapshot's bytes (replica snapshots skipped by header). CI runs this.
+metalog-smoke:
+	$(PY) benchmarks/bench_meta_log.py --smoke
 
 # fail on tracked bytecode: .gitignore stops NEW __pycache__/.pyc adds,
 # but nothing caught files already committed — CI runs this too.

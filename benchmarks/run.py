@@ -17,7 +17,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_checkpoint, bench_io_scaling,
-                            bench_kernels, bench_repair,
+                            bench_kernels, bench_meta_log, bench_repair,
                             bench_repair_daemon, bench_replication,
                             bench_staging, bench_tiered_io,
                             bench_tiering, bench_workflow)
@@ -31,6 +31,7 @@ def main(argv=None) -> None:
         "workflow": bench_workflow.run,           # dataset exchange (§V-A)
         "repair": bench_repair.run,               # replication-factor repair
         "repair_daemon": bench_repair_daemon.run,  # single-copy window
+        "meta_log": bench_meta_log.run,           # append vs JSON rewrite
         "kernels": bench_kernels.run,
     }
     print("name,us_per_call,derived")

@@ -28,12 +28,42 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.data_scheduler import DataScheduler, ExternalStore
+from repro.core.data_scheduler import (DataScheduler, ExternalStore,
+                                       SupersededError)
 from repro.core.dataset_exchange import ack_targets
+from repro.core.meta_log import MetaLog
 from repro.core.object_store import (PMemObjectStore, _flatten, _unflatten)
 from repro.kernels.ckpt_codec.ref import decode_ref, encode_ref
 
 TILE = 1024
+
+
+def _fold_ckpt_acks(state: dict, ev: dict) -> None:
+    """MetaLog reducer for the checkpoint ack registry. State maps
+    ``str(step)`` (JSON object keys are strings — snapshot round-trips
+    must be identity) to the ack record the old per-step JSON held:
+    ``{"step", "ts", "acks": {nid: {kind: rec}}, "ring", "delta_base"}``.
+
+    ``seed`` RESETS the step's record (same incarnation semantics as the
+    old seed-overwrites-file write: a re-save after recovery must not
+    resurrect acks describing the previous incarnation's slots);
+    ``ack`` upserts one (nid, kind) entry; ``adopt`` migrates a legacy
+    pre-log JSON record wholesale. Records are copy-on-write so readers
+    holding a previous dict keep a consistent snapshot."""
+    op = ev["op"]
+    if op == "seed":
+        state[str(ev["step"])] = {
+            "step": ev["step"], "ts": ev["ts"], "acks": {},
+            "ring": ev.get("ring"), "delta_base": ev.get("delta_base")}
+    elif op == "adopt":
+        state.setdefault(str(ev["step"]), ev["rec_map"])
+    elif op == "ack":
+        key = str(ev["step"])
+        rec_map = state.get(key) or {"step": ev["step"], "acks": {}}
+        acks = {nid: dict(kinds)
+                for nid, kinds in (rec_map.get("acks") or {}).items()}
+        acks.setdefault(ev["nid"], {})[ev["kind"]] = ev["rec"]
+        state[key] = {**rec_map, "acks": acks}
 
 
 def _merge_acks(maps: Sequence[Dict[str, Dict[str, dict]]]
@@ -93,11 +123,12 @@ class DistributedCheckpointer:
         # its ack writes serialise on this lock.
         self.replication = None
         self._ack_lock = threading.Lock()
-        # step -> manifest-with-acks as last written by THIS process:
-        # acks for one checkpoint arrive in bursts from 2N scheduler
-        # tasks, so cache the merged state and pay the cross-pool READ
-        # only once per step (writes still go to every live pool)
-        self._ack_cache: Dict[int, dict] = {}
+        # the ack registry lives in one append-only replicated pmem log
+        # (ckpt/ackslog): a seed or ack is a ~100-byte APPEND to every
+        # live pool, not a rewrite of a per-step JSON file; the folded
+        # head state plays the role of the old per-step cache. Lazy:
+        # first use replays the log (cold processes pay one scan).
+        self._ack_log: Optional[MetaLog] = None
         # step -> slot, so hot save paths (delta base avoidance) don't
         # re-read the full base manifest from every pool; _slot_pin
         # protects the active delta base from cache trimming
@@ -136,7 +167,10 @@ class DistributedCheckpointer:
         for nid in self.nodes:
             try:
                 copies.append(self.stores[nid].pool.get_json(name))
-            except (IOError, FileNotFoundError) as e:
+            except (IOError, FileNotFoundError, ValueError) as e:
+                # ValueError covers a torn/truncated JSON copy: put_json
+                # commits atomically, so a malformed file is media
+                # damage on ONE pool — the surviving copies still win
                 err = e
         if not copies:
             raise err if err is not None else FileNotFoundError(name)
@@ -259,20 +293,16 @@ class DistributedCheckpointer:
         self._meta_put_json("ckpt/latest.json",
                             {"step": step, "ts": manifest["ts"]})
         with self._ack_lock:
-            # seed (and invalidate any stale copy of) the ack record for
-            # this step: a re-save after recovery must not resurrect
-            # acks that described the previous incarnation's slots.
+            # seed (and invalidate any stale state of) the ack record
+            # for this step: a re-save after recovery must not resurrect
+            # acks that described the previous incarnation's slots (the
+            # seed event RESETS the step's entry in the log fold).
             # ring + delta_base recorded here too: the recoverability
-            # ranking then needs only small metadata reads per skipped
+            # ranking then needs only the folded log state per skipped
             # step, and can follow the delta chain without manifests.
-            # ts = this save's commit time: the incarnation tag that
-            # outranks (and excludes from merge) any stale record left
-            # from an earlier save of the same step number
-            fresh = {"step": step, "ts": manifest["ts"], "acks": {},
-                     "ring": ring, "delta_base": manifest["delta_base"]}
-            self._meta_put_json(self._ack_name(step), fresh)
-            self._ack_cache[step] = fresh
-            self._trim_ack_cache_locked()
+            self._acklog().append(
+                {"op": "seed", "step": step, "ts": manifest["ts"],
+                 "ring": ring, "delta_base": manifest["delta_base"]})
             self._slot_cache[step] = slot
             # pin what the next delta will read: the base just used, or
             # this full save (the likely next base)
@@ -304,48 +334,77 @@ class DistributedCheckpointer:
     # ---- per-node acknowledgement map --------------------------------
     @staticmethod
     def _ack_name(step: int) -> str:
+        # legacy pre-log location, still read as a fallback for steps
+        # saved before the registry moved into ckpt/ackslog
         return f"ckpt/acks_step{step}.json"
 
-    def _trim_ack_cache_locked(self) -> None:
-        # bound the cache to the live shadow-slot window
-        while len(self._ack_cache) > max(self.slots, 2):
-            self._ack_cache.pop(min(self._ack_cache))
+    def _acklog(self) -> MetaLog:
+        if self._ack_log is None:
+            self._ack_log = MetaLog(self.stores, self.nodes,
+                                    "ckpt/ackslog",
+                                    fold=_fold_ckpt_acks)
+        return self._ack_log
 
     def record_ack(self, step: int, nid: str, kind: str,
                    info: Optional[dict] = None) -> None:
         """Record one completed replicate ("replica") or drain ("drain")
-        for ``nid`` at ``step`` into the manifest's per-node ack map
-        (persisted as the sibling ``ckpt/acks_step<N>.json`` record,
-        replicated to every live pool). Called from scheduler worker
-        threads on task completion; the read-merge-write is serialised
-        on ``_ack_lock`` and merges records across pool copies so
-        concurrent acks and partial pool outages never lose acks."""
-        name = self._ack_name(step)
+        for ``nid`` at ``step``: one small entry APPENDED to the
+        replicated ack log (ckpt/ackslog) — ~100 bytes per ack, not a
+        rewrite of the step's whole ack map. Called from scheduler
+        worker threads on task completion; appends serialise on
+        ``_ack_lock`` and the log's seq-union replay merges entries
+        across pool copies, so concurrent acks and partial pool outages
+        never lose acks."""
+        rec = dict(info or {})
+        rec["ts"] = time.time()
         with self._ack_lock:
-            rec_map = self._ack_cache.get(step)
-            if rec_map is None:
+            log = self._acklog()
+            if log.state().get(str(step)) is None:
+                # an ack for a step saved before the log existed:
+                # migrate the legacy JSON record into the log first so
+                # the new entry lands on a complete base
                 try:
-                    rec_map = self._meta_get_json(name)
+                    legacy = self._meta_get_json(self._ack_name(step))
+                    log.append({"op": "adopt", "step": step,
+                                "rec_map": legacy})
                 except (IOError, FileNotFoundError):
-                    rec_map = {"step": step, "acks": {}}
-            rec = dict(info or {})
-            rec["ts"] = time.time()
-            rec_map.setdefault("acks", {}).setdefault(nid, {})[kind] = rec
-            self._meta_put_json(name, rec_map)
-            self._ack_cache[step] = rec_map
-            self._trim_ack_cache_locked()
+                    pass
+            log.append({"op": "ack", "step": step, "nid": nid,
+                        "kind": kind, "rec": rec})
+
+    def ack_record(self, step: int) -> Optional[dict]:
+        """The full ack record for ``step`` — ``{"step", "ts", "acks",
+        "ring", "delta_base"}`` — from the ack log's folded state, with
+        the legacy per-step JSON (``ckpt/acks_step<N>.json``) as a
+        read-only fallback for pre-log deployments. None when the step
+        never seeded a record (pre-ack legacy save): consumers treat
+        that as nothing-promised/always-probe."""
+        rec = self._acklog().state().get(str(step))
+        if rec is not None:
+            return rec
+        try:
+            return self._meta_get_json(self._ack_name(step))
+        except (IOError, FileNotFoundError):
+            return None
 
     def acks(self, step: int) -> Dict[str, Dict[str, dict]]:
         """The merged per-node ack map for ``step`` ({} if unknown)."""
-        try:
-            rec_map = self._meta_get_json(self._ack_name(step))
-        except (IOError, FileNotFoundError):
+        rec_map = self.ack_record(step)
+        if rec_map is None:
             return {}
         return dict(rec_map.get("acks") or {})
 
     def wait_async(self) -> None:
+        """Join pending post-commit replicate/drain work, raising real
+        errors. A ``SupersededError`` is benign here: the source slot
+        was reused by a NEWER save before the queued transfer read it,
+        and that save queued its own replicate — dropping the stale one
+        loses nothing (same filter as the TieredIO joins)."""
         for f in self._pending:
-            f.result()
+            try:
+                f.result()
+            except SupersededError:
+                pass
         self._pending = []
 
     # ------------------------------------------------------------------
@@ -516,9 +575,8 @@ class DistributedCheckpointer:
         without an ack record (pre-ack saves, or the record lost with
         its pools) stay plausible — the probing restore is then the
         arbiter."""
-        try:
-            rec_map = self._meta_get_json(self._ack_name(step))
-        except (IOError, FileNotFoundError):
+        rec_map = self.ack_record(step)
+        if rec_map is None:
             return True
         ring = rec_map.get("ring") or self.nodes
         acks = rec_map.get("acks") or {}

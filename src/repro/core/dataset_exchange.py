@@ -44,6 +44,34 @@ copy (``target`` is kept for legacy single-replica records); replica
 repair (``TieredIO.repair``) prunes targets lost with their nodes and
 appends the freshly-placed buddy, so ``recoverable`` stays truthful
 across successive node losses.
+
+Storage: log-structured records (B-APM appends, not rewrites)
+-------------------------------------------------------------
+``publish`` writes the full birth record once as a replicated JSON file
+(discovery: ``versions``/``records`` list these, and legacy readers
+still merge them), but every subsequent mutation — replica acks, lease
+grants, release tombstones, unretain, gc reclaim — is ONE small typed
+event APPENDED to the replicated catalog log (``exch/catalog.log``, a
+``MetaLog``). ``record()``/``_get_json_merged`` read the log's folded
+head state (replay = same reducer, deterministic), falling back to the
+cross-pool JSON merge only for pre-log legacy records. GC decisions
+(which leases to prune, whether to reclaim) are computed once at
+decision time and recorded IN the event, so replay never re-evaluates
+clocks. Terminal semantics (``released``/``reclaimed`` win) now follow
+from log order instead of tombstone merging — but the tombstones are
+still written, so a pool holding only a stale pre-mutation JSON copy
+can never resurrect a lease or a reclaimed record.
+
+**Single-writer-per-record contract**: the read-check-then-append
+sections (``acquire``'s reclaimed check, ``gc``'s keep/reclaim
+decision) serialise on ``self._lock`` — per process only. Concurrent
+mutators of the SAME record in different processes are not ordered:
+the log's seq-union replay loses no events, but cross-process
+check-then-act races (e.g. two gc sweeps deciding from different
+snapshots) are the deployment's responsibility to avoid — one catalog
+writer per record (in practice: the producing workflow's scheduler
+process) is the assumed topology, matching how ``SimCluster`` wires a
+single shared catalog.
 """
 from __future__ import annotations
 
@@ -53,6 +81,7 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.core.meta_log import MetaLog
 from repro.core.object_store import PMemObjectStore, content_digest
 
 #: lineage marker for inputs that came from outside the catalog
@@ -140,7 +169,10 @@ def read_json_copies(stores: Dict[str, PMemObjectStore],
     for nid in nodes:
         try:
             copies.append(stores[nid].pool.get_json(name))
-        except (IOError, FileNotFoundError) as e:
+        except (IOError, FileNotFoundError, ValueError) as e:
+            # ValueError: a torn/truncated JSON copy (media damage on
+            # one pool — put_json itself commits atomically). The
+            # surviving well-formed copies still win the merge.
             err = e
     if not copies:
         raise err if err is not None else FileNotFoundError(name)
@@ -150,6 +182,57 @@ def read_json_copies(stores: Dict[str, PMemObjectStore],
 def cache_key(workflow: str, name: str, version: int) -> str:
     """DLM-cache key for a dataset version (lease-aware eviction keys)."""
     return f"exch/{workflow}/{name}@v{version}"
+
+
+def _fold_catalog(state: dict, ev: dict) -> None:
+    """MetaLog reducer for catalog records: state maps the record name
+    (``exch/<wf>/<name>@v<N>.json``) to the full record dict. Every
+    event bumps the record's ``ts`` (the old every-update-advances-ts
+    rule); records are copy-on-write so readers holding the previous
+    dict keep a consistent snapshot. ``gc`` events carry the lease-keep
+    list and the reclaim verdict VERBATIM — the decision was made once,
+    under the writer's lock, against the writer's clock; replay only
+    re-applies it."""
+    op, rname = ev["op"], ev["rec"]
+    if op == "put":
+        rec = dict(ev["record"])
+        rec["leases"] = dict(rec.get("leases") or {})
+        rec["acks"] = dict(rec.get("acks") or {})
+        state[rname] = rec
+        return
+    old = state.get(rname)
+    if old is None:
+        return  # event for a record the log never saw (pruned/foreign)
+    rec = {**old, "leases": dict(old.get("leases") or {}),
+           "acks": dict(old.get("acks") or {}), "ts": ev["ts"]}
+    if op == "ack_add":
+        targets = sorted(set(ack_targets(rec["acks"].get("replica")))
+                         | {ev["target"]})
+        rec["acks"]["replica"] = {"target": ev["target"],
+                                  "targets": targets, "ts": ev["ts"]}
+    elif op == "ack_put":
+        rec["acks"]["replica"] = {"target": ev["target"],
+                                  "targets": sorted(ev["targets"]),
+                                  "ts": ev["ts"]}
+    elif op == "lease":
+        rec["leases"][ev["lid"]] = {"owner": ev["owner"],
+                                    "expires": ev["expires"],
+                                    "ts": ev["ts"]}
+    elif op == "lease_release":
+        old_l = rec["leases"].get(ev["lid"]) or {}
+        rec["leases"][ev["lid"]] = {
+            "owner": ev["owner"],
+            "expires": old_l.get("expires", ev["expires"]),
+            "released": True, "ts": ev["ts"]}
+    elif op == "unretain":
+        rec["retained"] = False
+    elif op == "gc":
+        keep = set(ev["keep"])
+        rec["leases"] = {lid: l for lid, l in rec["leases"].items()
+                         if lid in keep}
+        if ev.get("reclaimed"):
+            rec["reclaimed"] = True
+    state[rname] = rec
 
 
 class DatasetCatalog:
@@ -171,16 +254,19 @@ class DatasetCatalog:
         # by TieredIO.attach_catalog, or left None for standalone use
         self.exchange = exchange
         self.cache = cache  # DLMCache: read path admits, leases pin
-        self._lock = threading.Lock()  # serialises record read-merge-write
+        # serialises every read-check-then-append on a record (see the
+        # single-writer-per-record contract in the module docstring);
+        # reentrant so gc/acquire can compose reads with event appends
+        self._lock = threading.RLock()
         self._lease_seq = itertools.count(1)
         self._leases: Dict[str, Lease] = {}  # issued by THIS process
         self._version_cache: Dict[Tuple[str, str], int] = {}
-        # write-through record cache: every mutation in this process
-        # goes through _put_json_all under _lock, so the cached copy IS
-        # the merged state — record() skips 4 pool reads per lookup. A
-        # fresh process (resume after crash) starts cold and reads the
-        # replicated pool copies. Callers treat records as read-only.
+        # records live in the replicated catalog log: the folded head
+        # state IS the cache (replay rebuilds it cold). _rec_cache only
+        # fronts legacy pre-log records written via _put_json_all.
         self._rec_cache: Dict[str, dict] = {}
+        self._log = MetaLog(stores, self.nodes, "exch/catalog.log",
+                            fold=_fold_catalog)
         self.stats = {"published": 0, "reclaimed": 0, "replica_reads": 0}
 
     # ---- replicated record I/O (same discipline as checkpoint meta) ---
@@ -192,11 +278,14 @@ class DatasetCatalog:
         self._rec_cache[name] = obj
 
     def _get_json_merged(self, name: str) -> dict:
-        """Union a record across pools: newest ``ts`` wins the scalar
-        fields; ``leases`` and ``acks`` are merged (an ack recorded while
-        some pool was down exists only on the pools live at ack time).
-        Served from the write-through cache when this process authored
-        the last write."""
+        """One record's current state: the catalog log's folded head
+        state (log replay + cache — the modern path), else the legacy
+        cross-pool JSON union merge for records that predate the log
+        (newest ``ts`` wins the scalar fields; ``leases`` and ``acks``
+        are merged; ``released``/``reclaimed`` stay terminal)."""
+        rec = self._log.state().get(name)
+        if rec is not None:
+            return rec
         cached = self._rec_cache.get(name)
         if cached is not None:
             return cached
@@ -300,7 +389,15 @@ class DatasetCatalog:
                         "inputs": [list(ref) for ref in inputs]},
             "leases": {}, "acks": {},
         }
-        self._put_json_all(_rec_name(workflow, name, v), rec)
+        rname = _rec_name(workflow, name, v)
+        # birth record: ONE full JSON write for discovery (versions/
+        # records list these files; legacy readers merge them) ...
+        self._put_json_all(rname, rec)
+        # ... then every mutation is an appended log event; the "put"
+        # seeds the log's folded state with the same birth record
+        with self._lock:
+            self._log.append({"op": "put", "rec": rname, "record": rec,
+                              "ts": rec["ts"]})
         self.stats["published"] += 1
         if replicate and self.exchange is not None and len(live) > 1:
             ring = live
@@ -314,14 +411,8 @@ class DatasetCatalog:
     def _ack_recorder(self, workflow: str, name: str, version: int,
                       target: str):
         def record(_result) -> None:
-            def add(rec: dict) -> None:
-                targets = sorted(
-                    set(ack_targets(rec["acks"].get("replica")))
-                    | {target})
-                rec["acks"]["replica"] = {"target": target,
-                                          "targets": targets,
-                                          "ts": time.time()}
-            self._update_record(workflow, name, version, add)
+            self._append_event(workflow, name, version,
+                               {"op": "ack_add", "target": target})
         return record
 
     def record_repair_ack(self, workflow: str, name: str, version: int,
@@ -330,30 +421,26 @@ class DatasetCatalog:
         target list (pruning holders lost with their nodes, adding the
         fresh buddy). Runs only after the new copy is durable — the
         RepairChannel calls this from inside the replicate task."""
-        def put(rec: dict) -> None:
-            rec["acks"]["replica"] = {"target": target,
-                                      "targets": sorted(targets),
-                                      "ts": time.time()}
-        self._update_record(workflow, name, version, put)
+        self._append_event(workflow, name, version,
+                           {"op": "ack_put", "target": target,
+                            "targets": sorted(targets)})
 
-    def _update_record(self, workflow: str, name: str, version: int,
-                       mutate) -> dict:
-        """Serialised read-merge-mutate-write of one record across all
-        live pools (same discipline as checkpoint ack records)."""
+    def _append_event(self, workflow: str, name: str, version: int,
+                      ev: dict) -> dict:
+        """Append one mutation event for a record to the catalog log
+        (the replacement for the old read-merge-rewrite of the whole
+        JSON record). A record that predates the log is adopted first:
+        its legacy cross-pool merge is logged as a ``put`` so the event
+        lands on a complete base. Returns the record's new head state."""
         rname = _rec_name(workflow, name, version)
         with self._lock:
-            old = self._get_json_merged(rname)
-            # mutate a copy and swap: readers holding the previous dict
-            # keep a consistent snapshot (no mutate-while-iterate races)
-            rec = {**old, "leases": dict(old.get("leases") or {}),
-                   "acks": dict(old.get("acks") or {})}
-            mutate(rec)
-            # every update advances ts: the cross-pool merge's "newest
-            # copy wins" rule must see an updated copy as newer than a
-            # stale one a briefly-unreachable pool kept
-            rec["ts"] = time.time()
-            self._put_json_all(rname, rec)
-            return rec
+            if self._log.state().get(rname) is None:
+                base = self._get_json_merged(rname)  # legacy/birth copy
+                self._log.append({"op": "put", "rec": rname,
+                                  "record": base,
+                                  "ts": base.get("ts", time.time())})
+            self._log.append({**ev, "rec": rname, "ts": time.time()})
+            return self._log.state()[rname]
 
     # ---- read path ----------------------------------------------------
     def record(self, name: str, workflow: str = "default",
@@ -435,23 +522,20 @@ class DatasetCatalog:
         """Take a lease on a dataset version; GC cannot reclaim its bytes
         until every lease is released or expired."""
         rec = self.record(name, workflow, version)
-        if rec.get("reclaimed"):
-            raise KeyError(f"dataset {workflow}/{name}@v{rec['version']} "
-                           f"already reclaimed")
         v = rec["version"]
         lid = f"{owner}-{next(self._lease_seq)}"
         lease = Lease(lid, name, workflow, v, owner, time.time() + ttl_s)
-
-        def add(r: dict) -> None:
-            # re-checked under the record lock: a GC that won the race
-            # and marked the record reclaimed must refuse the lease
-            if r.get("reclaimed"):
+        with self._lock:
+            # checked under the catalog lock: a GC that won the race and
+            # logged the reclaim must refuse the lease (the check and
+            # the lease event are atomic w.r.t. gc's decide-and-append)
+            if self.record(name, workflow, v).get("reclaimed"):
                 raise KeyError(f"dataset {workflow}/{name}@v{v} "
                                f"already reclaimed")
-            r["leases"][lid] = {"owner": owner, "expires": lease.expires,
-                                "ts": time.time()}
-
-        self._update_record(workflow, name, v, add)
+            self._append_event(workflow, name, v,
+                               {"op": "lease", "lid": lid,
+                                "owner": owner,
+                                "expires": lease.expires})
         self._leases[lid] = lease
         return lease
 
@@ -465,16 +549,12 @@ class DatasetCatalog:
         ``expires`` and is pruned by gc once safely past it (when any
         stale live copy is expired too)."""
         self._leases.pop(lease.lease_id, None)
-
-        def mark(r: dict) -> None:
-            old = r["leases"].get(lease.lease_id) or {}
-            r["leases"][lease.lease_id] = {
-                "owner": lease.owner,
-                "expires": old.get("expires", lease.expires),
-                "released": True, "ts": time.time()}
         try:
-            self._update_record(lease.workflow, lease.name,
-                                lease.version, mark)
+            self._append_event(lease.workflow, lease.name, lease.version,
+                               {"op": "lease_release",
+                                "lid": lease.lease_id,
+                                "owner": lease.owner,
+                                "expires": lease.expires})
         except (IOError, FileNotFoundError):
             pass  # record unreachable — expiry reclaims it eventually
 
@@ -493,8 +573,8 @@ class DatasetCatalog:
         """Drop producer retention: the dataset becomes reclaimable as
         soon as its refcount reaches zero."""
         rec = self.record(name, workflow, version)
-        self._update_record(workflow, name, rec["version"],
-                            lambda r: r.update({"retained": False}))
+        self._append_event(workflow, name, rec["version"],
+                           {"op": "unretain"})
 
     def leased_cache_keys(self, now: Optional[float] = None) -> Set[str]:
         """DLM-cache keys of datasets this process holds live leases on
@@ -531,8 +611,10 @@ class DatasetCatalog:
         any stale still-live pool copy of the lease is expired too, so
         pruning can never let one resurrect.
 
-        The decision runs inside the record's locked read-mutate-write
-        against the CURRENT copy (not the scan snapshot), and the
+        The decision runs under the catalog lock against the CURRENT
+        head state (not the scan snapshot), is recorded verbatim in the
+        appended ``gc`` event (keep-list + reclaim verdict — replay
+        re-applies the decision, never re-evaluates clocks), and the
         terminal ``reclaimed`` mark lands BEFORE any bytes are deleted —
         a lease acquired concurrently either lands first (and defers
         reclaim) or sees ``reclaimed`` and is refused; it is never
@@ -543,29 +625,32 @@ class DatasetCatalog:
         for rec in self.records():
             if rec.get("reclaimed"):
                 continue
-            decision: Dict[str, bool] = {}
-
-            def decide(r: dict, decision=decision) -> None:
-                # keep everything not safely past expiry (skew margin),
-                # tombstones included; live = the subset actually
-                # holding the bytes (unexpired AND unreleased)
-                keep = {lid: l for lid, l in
-                        (r.get("leases") or {}).items()
-                        if l.get("expires", 0) + margin > now}
-                r["leases"] = keep  # prune against the current copy
-                live = {lid: l for lid, l in keep.items()
-                        if not l.get("released")}
-                if not r.get("retained") and not live \
-                        and not r.get("reclaimed"):
-                    r["reclaimed"] = True
-                    decision["reclaim"] = True
-
             try:
-                self._update_record(rec["workflow"], rec["name"],
-                                    rec["version"], decide)
-            except (IOError, FileNotFoundError):
+                with self._lock:
+                    # decide against the CURRENT head state (a lease may
+                    # have landed since the scan snapshot)
+                    r = self.record(rec["name"], rec["workflow"],
+                                    rec["version"])
+                    if r.get("reclaimed"):
+                        continue
+                    leases = r.get("leases") or {}
+                    # keep everything not safely past expiry (skew
+                    # margin), tombstones included; live = the subset
+                    # actually holding the bytes (unexpired AND
+                    # unreleased)
+                    keep = {lid: l for lid, l in leases.items()
+                            if l.get("expires", 0) + margin > now}
+                    live = {lid: l for lid, l in keep.items()
+                            if not l.get("released")}
+                    reclaim = not r.get("retained") and not live
+                    if reclaim or len(keep) != len(leases):
+                        self._append_event(
+                            rec["workflow"], rec["name"], rec["version"],
+                            {"op": "gc", "keep": sorted(keep),
+                             "reclaimed": reclaim})
+            except (IOError, FileNotFoundError, KeyError):
                 continue  # record unreachable right now — next sweep
-            if decision.get("reclaim"):
+            if reclaim:
                 self._delete_bytes(rec)
                 reclaimed.append(
                     (rec["workflow"], rec["name"], rec["version"]))

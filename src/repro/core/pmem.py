@@ -63,6 +63,20 @@ class PMemRegion:
         self._mm.flush()
         self._flushed = True
 
+    def resize(self, nbytes: int) -> None:
+        """Grow (or shrink) the region in place, preserving content up
+        to ``min(old, new)`` bytes — the pool-extend primitive behind
+        append-only logs. Flushes, remaps; existing offsets stay valid."""
+        if nbytes == self.nbytes:
+            return
+        self._mm.flush()
+        del self._mm
+        with open(self.path, "r+b") as f:
+            f.truncate(nbytes)
+        self.nbytes = nbytes
+        self._mm = np.memmap(self.path, dtype=np.uint8, mode="r+",
+                             shape=(nbytes,))
+
     def close(self) -> None:
         self.flush()
         del self._mm
@@ -128,6 +142,45 @@ class PMemPool:
             self._open[name] = region
             return region
 
+    def open_or_create(self, name: str, nbytes: int) -> PMemRegion:
+        """Open an existing region, or create it at ``nbytes`` — the
+        idempotent entry point for append-only logs."""
+        with self._lock:
+            self._check_alive()
+            if self.exists(name):
+                return self.open(name)
+            return self.create(name, nbytes)
+
+    def extend(self, name: str, nbytes: int) -> PMemRegion:
+        """Grow a region to at least ``nbytes`` (byte-range log growth —
+        no whole-file rewrite). Returns the (possibly resized) region."""
+        with self._lock:
+            self._check_alive()
+            region = self.open(name)
+            if region.nbytes < nbytes:
+                grow = nbytes - region.nbytes
+                if self.used_bytes() + grow > self.capacity_bytes:
+                    raise MemoryError(
+                        f"pmem pool {self.node_id} over capacity: "
+                        f"{self.used_bytes() + grow} > "
+                        f"{self.capacity_bytes}")
+                region.resize(nbytes)
+            return region
+
+    def rename(self, src: str, dst: str) -> None:
+        """Atomically replace region ``dst`` with ``src`` (POSIX rename)
+        — the commit point of log compaction: the compacted file becomes
+        the log in one step, so a crash leaves either the old log or the
+        new one, never a torn mix. Open handles to both names are
+        closed and evicted (re-``open`` maps the new file)."""
+        with self._lock:
+            self._check_alive()
+            for name in (src, dst):
+                r = self._open.pop(name, None)
+                if r is not None:
+                    r.close()
+            os.replace(self._path(src), self._path(dst))
+
     def exists(self, name: str) -> bool:
         return not self._dead and self._path(name).exists()
 
@@ -172,7 +225,11 @@ class PMemPool:
 
     # ---- small atomic metadata (manifests) ----
     def put_json(self, name: str, obj) -> None:
-        """Crash-consistent metadata commit: tmp write + fsync + rename."""
+        """Crash-consistent metadata commit: tmp write + fsync + rename
+        + parent-dir fsync. A crash at ANY point leaves either the old
+        complete record or the new complete record — never torn bytes —
+        so the cross-pool merge readers can treat every readable copy as
+        well-formed (and tolerate the unreadable ones)."""
         self._check_alive()
         path = self._path(name)
         path.parent.mkdir(parents=True, exist_ok=True)
@@ -182,6 +239,16 @@ class PMemPool:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)  # atomic on POSIX
+        # persist the rename itself: without the directory fsync the
+        # rename can be reordered past the crash and resurrect the tmp
+        try:
+            dfd = os.open(path.parent, os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+        except OSError:
+            pass  # some filesystems refuse directory fsync — best effort
 
     def get_json(self, name: str):
         self._check_alive()

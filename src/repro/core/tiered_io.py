@@ -61,19 +61,51 @@ The same under-promise discipline covers the other two ack surfaces:
 
   * **DLM objects** (``offload``, serve KV/session spill): every buddy
     copy of ``dlm/<name>`` is registered through the replication channel
-    and acknowledged into the sibling record ``dlm/acks.json``
-    (``DLMAckRegistry`` — one small JSON replicated to every live pool
-    and union-merged across copies like checkpoint ack records). A dirty
-    DLM write-back (eviction/flush of a mutated object) re-queues the
-    buddy copy through the same path, so replicas never go stale behind
-    the cache. Replica-fallback reads consult the acked targets first.
+    and acknowledged into the replicated ack log ``dlm/ackslog``
+    (``DLMAckRegistry`` — one ``MetaLog`` event per registration; a
+    legacy ``dlm/acks.json`` from a pre-log deployment is read as the
+    replay base). A dirty DLM write-back (eviction/flush of a mutated
+    object) re-queues the buddy copy through the same path, so replicas
+    never go stale behind the cache. Replica-fallback reads consult the
+    acked targets first.
   * **Datasets** (``DatasetCatalog.publish``): the exchange channel's
-    ack is recorded into the catalog record (``acks.replica``).
+    ack is appended to the catalog's record log (``acks.replica`` in
+    the folded record).
 
 Every ack records the full ``targets`` list of nodes holding an
 acknowledged copy (legacy records carry a single ``target``; readers
 treat it as a one-element list). An object is recoverable for a lost
 set as long as ANY acked copy survives it.
+
+The metadata log durability contract
+------------------------------------
+All three ack surfaces (and the catalog records and workflow journals)
+persist through ``MetaLog`` (core/meta_log.py) — an append-only,
+CRC-guarded record log replicated to every live pool — instead of
+rewriting whole JSON blobs per update. The guarantees recovery relies
+on:
+
+  * **Committed-tail appends**: an update is one appended entry — entry
+    bytes are flushed BEFORE the header's committed tail advances, so a
+    torn append is invisible to replay; an ack visible to any reader is
+    complete and durable on at least one pool.
+  * **Union replay**: recovery replays the newest snapshot plus the
+    seq-union of newer entries across all readable copies — an ack that
+    landed on any surviving pool is never lost, exactly like the old
+    per-pool JSON merge, at O(tail) instead of O(state) read cost.
+  * **Acked compaction**: the log folds its prefix into a snapshot only
+    after the snapshot file is written + flushed on every live pool;
+    the prefix trim is a per-pool atomic rename. A crash anywhere in
+    compaction leaves every pool with a log that replays the identical
+    state (old log, or snapshot-equivalent new one).
+  * **Per-pool cursors + reseed**: the writer tracks (epoch, tail) per
+    copy; a pool that missed appends (down, then rejoined) is reseeded
+    with a full snapshot before the next entry lands on it, so every
+    synced copy is individually sufficient for replay.
+
+The ranking in ``restore_latest_recoverable``, the repair scans and the
+workflow resume decisions all read these logs' folded state — still
+metadata-only, zero blind object-store probes.
 
 Replica repair — restoring the replication factor after node loss
 -----------------------------------------------------------------
@@ -143,8 +175,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.core.checkpoint import DistributedCheckpointer
 from repro.core.data_scheduler import DataScheduler, SupersededError
-from repro.core.dataset_exchange import (ack_targets, put_json_all_pools,
-                                         read_json_copies)
+from repro.core.dataset_exchange import ack_targets, read_json_copies
+from repro.core.meta_log import MetaLog
 from repro.core.tiering import DLMCache
 
 
@@ -339,38 +371,46 @@ class ExchangeChannel:
         return fut
 
 
+def _fold_dlm_acks(state: dict, ev: dict) -> None:
+    """MetaLog reducer for the DLM ack registry: state maps the full
+    object name to its ack record; a ``record`` event wins wholesale
+    (the repair-pruned targets list must not be resurrected)."""
+    state[ev["name"]] = {"home": ev["home"],
+                         "targets": list(ev["targets"]),
+                         "ts": ev["ts"]}
+
+
 class DLMAckRegistry:
     """Per-object replica acks for DLM objects — the third ack surface.
 
-    One small sibling record, ``dlm/acks.json``, replicated to every
-    live pool and merged across copies on read (same discipline as
-    ``ckpt/acks_step<N>.json``): object names are union'd, and for the
-    same object the newest record (by its own ``ts``) wins wholesale —
-    a repair that PRUNED dead targets must not have them resurrected by
-    a stale pool copy. Entries:
+    The registry is an append-only replicated pmem log (``dlm/ackslog``,
+    a ``MetaLog``): each ack APPENDS one small entry to every live pool
+    instead of rewriting the whole object map, and the folded head state
+    maps object names to their newest record — for the same object the
+    latest entry wins wholesale, so a repair that PRUNED dead targets
+    never has them resurrected by a stale copy (log order replaces the
+    old per-``ts`` merge). State entries:
 
-      {"objects": {"dlm/<name>": {"home": nid, "targets": [nids],
-                                  "ts": ...}}, "ts": ...}
+      {"dlm/<name>": {"home": nid, "targets": [nids], "ts": ...}}
 
     ``record`` is called from scheduler worker threads inside the
     replicate task, after the buddy copy is durable — a failed copy
     records nothing, so the registry under-promises, never
-    over-promises. The write-through cache mirrors the catalog's: every
-    mutation in this process rewrites all live pools under the lock, so
-    the cached copy IS the merged state; a fresh process starts cold
-    and reads the replicated pool copies."""
+    over-promises. A fresh process replays the log cold; the legacy
+    pre-log ``dlm/acks.json`` record (if present) is folded in as the
+    replay base, so old deployments migrate transparently."""
 
-    NAME = "dlm/acks.json"
+    NAME = "dlm/acks.json"  # legacy pre-log record (read-only base)
+    LOG = "dlm/ackslog"
 
     def __init__(self, stores, nodes: Sequence[str]):
         self.stores = stores
         self.nodes = sorted(nodes)
         self._lock = threading.Lock()
-        self._cache: Optional[Dict[str, dict]] = None
+        self._log = MetaLog(stores, self.nodes, self.LOG,
+                            fold=_fold_dlm_acks, base=self._legacy_base)
 
-    def _merged_locked(self) -> Dict[str, dict]:
-        if self._cache is not None:
-            return self._cache
+    def _legacy_base(self) -> Dict[str, dict]:
         try:
             copies = read_json_copies(self.stores, self.nodes, self.NAME)
         except (IOError, FileNotFoundError):
@@ -381,9 +421,6 @@ class DLMAckRegistry:
                 if name not in merged or \
                         rec.get("ts", 0) > merged[name].get("ts", 0):
                     merged[name] = rec
-        # cache the cold read too: a read-only process (serve fallback
-        # path) must not pay N pool reads + a merge per fetch
-        self._cache = merged
         return merged
 
     def record(self, name: str, home: str, target: str,
@@ -393,25 +430,23 @@ class DLMAckRegistry:
         existing target set. Repair passes an explicit ``targets`` list
         to REPLACE it (pruning targets lost with their nodes)."""
         with self._lock:
-            objects = dict(self._merged_locked())
             if targets is None:
-                targets = sorted(set(ack_targets(objects.get(name)))
-                                 | {target})
-            objects[name] = {"home": home, "targets": sorted(targets),
-                             "ts": time.time()}
-            put_json_all_pools(self.stores, self.nodes, self.NAME,
-                               {"objects": objects, "ts": time.time()})
-            self._cache = objects
+                targets = sorted(
+                    set(ack_targets(self._log.state().get(name)))
+                    | {target})
+            self._log.append({"op": "record", "name": name,
+                              "home": home,
+                              "targets": sorted(targets)})
 
     def objects(self) -> Dict[str, dict]:
         """The merged per-object ack map ({} when nothing ever acked)."""
         with self._lock:
-            return dict(self._merged_locked())
+            return dict(self._log.state())
 
     def targets(self, name: str) -> List[str]:
         """Acked replica holders of ``name`` (possibly empty)."""
         with self._lock:
-            return ack_targets(self._merged_locked().get(name))
+            return ack_targets(self._log.state().get(name))
 
 
 class RepairChannel:
@@ -602,7 +637,9 @@ class RepairChannel:
         seen_slots: Set[int] = set()
         for step in sorted(ckpt.available_steps(), reverse=True):
             try:
-                rec_map = ckpt._meta_get_json(ckpt._ack_name(step))
+                rec_map = ckpt.ack_record(step)
+                if rec_map is None:
+                    continue  # pre-ack legacy step: nothing promised
                 slot = ckpt._meta_get_json(
                     f"ckpt/manifest_step{step}.json")["slot"]
             except (IOError, FileNotFoundError, KeyError):

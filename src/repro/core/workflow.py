@@ -18,8 +18,8 @@ This scheduler runs that sequence CONCURRENTLY and RECOVERABLY:
     lineage-stamped, replica-acked, lease-protected. ``cleanup`` is the
     catalog's refcount/lease GC, not a blanket scrub;
   * progress persists in a **workflow journal**
-    (``wf/<id>/journal.json``, replicated to every live pool like
-    checkpoint manifests). After a node loss, ``resume`` replays ONLY
+    (``wf/<id>/journal.log``, an append-only ``MetaLog`` replicated to
+    every live pool). After a node loss, ``resume`` replays ONLY
     the jobs whose retained outputs the catalog's replica acks mark
     unrecoverable — completed jobs with surviving bytes (home or acked
     replica) are never re-invoked, and the decision reads zero objects,
@@ -30,15 +30,32 @@ This scheduler runs that sequence CONCURRENTLY and RECOVERABLY:
   * final-output drains are joined at the end of ``run``: a failed
     drain fails the workflow (``SupersededError`` stays benign).
 
-Journal schema (``wf/<id>/journal.json``):
+Journal format (``wf/<id>/journal.log`` — entry-per-event, appended):
 
-  {"workflow": id, "ts": last write, "status": running|done|failed,
-   "jobs": {job: {"status": "done", "nodes": [...],
-                  "outputs": {name: version}, "retained": [names],
-                  "drain": [names], "ts": ...}}}
+  {"op": "begin",  "workflow": id, "ts": ...}      run/resume started
+  {"op": "job",    "name": job, "entry": {...}, "ts": ...}
+                                                   one job's terminal
+                                                   state (appended at
+                                                   completion/failure —
+                                                   never rewrites the
+                                                   other entries)
+  {"op": "status", "status": done|failed, "ts": ...}
+
+Job entries carry what the old whole-journal rewrite recorded per job:
+``{"status": "done", "nodes": [...], "outputs": {name: version},
+"retained": [names], "drain": [names], "ts": ...}`` (or ``{"status":
+"failed", "error": ...}``). ``journal(wf)`` replays the log into the
+same merged dict shape as before — ``{"workflow", "ts", "status",
+"jobs": {job: entry}}`` — with the latest entry per job winning (log
+order replaces the old per-``ts`` cross-pool merge); a legacy
+``wf/<id>/journal.json`` from a pre-log run is read as the replay
+base. A resume appends a fresh ``begin`` and new ``job`` events; prior
+entries stay in the log — harmless, since replay decisions re-check
+recoverability against the catalog acks, never trust the journal alone.
 """
 from __future__ import annotations
 
+import copy
 import itertools
 import threading
 import time
@@ -49,12 +66,28 @@ from repro.core.data_scheduler import (DataScheduler, ExternalStore,
                                        SupersededError)
 from repro.core.dataset_exchange import (DatasetCatalog, EXTERNAL_INPUT,
                                          Lease, live_pools,
-                                         put_json_all_pools,
                                          read_json_copies)
+from repro.core.meta_log import MetaLog
 from repro.core.object_store import DistributedStore, PMemObjectStore
 
 #: default lease TTL for a job's hold on its inputs while it runs
 JOB_LEASE_TTL_S = 600.0
+
+
+def _fold_journal(state: dict, ev: dict) -> None:
+    """MetaLog reducer for workflow journals — rebuilds the merged
+    journal dict (``{"workflow", "ts", "status", "jobs"}``); the latest
+    ``job`` entry per job name wins (log order)."""
+    op = ev["op"]
+    if op == "begin":
+        state["workflow"] = ev["workflow"]
+        state["status"] = "running"
+        state.setdefault("jobs", {})
+    elif op == "status":
+        state["status"] = ev["status"]
+    elif op == "job":
+        state.setdefault("jobs", {})[ev["name"]] = ev["entry"]
+    state["ts"] = ev["ts"]
 
 
 @dataclass
@@ -123,30 +156,30 @@ class WorkflowScheduler:
         self._node_load: Dict[str, int] = {n: 0 for n in self.nodes}
         self._staged: Set[Tuple[str, str]] = set()   # (node, object name)
         self._workflows: Set[str] = set()            # namespaces run here
+        self._jlogs: Dict[str, MetaLog] = {}         # wf -> journal log
+        self._jlog_lock = threading.RLock()
 
     def _log(self, kind: str, detail: str) -> None:
         with self._ev_lock:
             self.events.append((time.time(), kind, detail))
 
-    # ---- journal (replicated like checkpoint manifests) --------------
+    # ---- journal (append-only MetaLog, replicated) -------------------
     @staticmethod
     def _journal_name(wf: str) -> str:
+        """Legacy pre-log journal object (replay base only)."""
         return f"wf/{wf}/journal.json"
 
     def _live(self) -> List[str]:
         return live_pools(self.stores, self.nodes)
 
-    def _journal_put(self, wf: str, journal: dict) -> None:
-        journal["ts"] = time.time()
-        put_json_all_pools(self.stores, self.nodes,
-                           self._journal_name(wf), journal)
-
-    def journal(self, wf: str) -> dict:
-        """The workflow journal merged across surviving pools: per-job
-        entries union'd, newest ``ts`` per job wins (a journal write
-        while some pool was down exists only on the pools live then)."""
-        copies = read_json_copies(self.stores, self.nodes,
-                                  self._journal_name(wf))
+    def _legacy_journal(self, wf: str) -> dict:
+        """Merged pre-log ``journal.json`` copies (the old read path) —
+        the replay base for workflows begun before the MetaLog port."""
+        try:
+            copies = read_json_copies(self.stores, self.nodes,
+                                      self._journal_name(wf))
+        except (IOError, FileNotFoundError):
+            return {}
         best = dict(max(copies, key=lambda c: c.get("ts", 0)))
         jobs: Dict[str, dict] = {}
         for c in copies:
@@ -156,6 +189,30 @@ class WorkflowScheduler:
                     jobs[jname] = e
         best["jobs"] = jobs
         return best
+
+    def _jlog(self, wf: str) -> MetaLog:
+        with self._jlog_lock:
+            log = self._jlogs.get(wf)
+            if log is None:
+                log = MetaLog(self.stores, self.nodes,
+                              f"wf/{wf}/journal.log", fold=_fold_journal,
+                              base=lambda: self._legacy_journal(wf))
+                self._jlogs[wf] = log
+            return log
+
+    def _journal_append(self, wf: str, ev: dict) -> None:
+        with self._jlog_lock:
+            self._jlog(wf).append(ev)
+
+    def journal(self, wf: str) -> dict:
+        """The workflow journal folded from its replicated MetaLog:
+        per-job entries in log order (latest event per job wins), the
+        merged legacy ``journal.json`` as replay base for pre-log runs.
+        Raises ``FileNotFoundError`` if no journal exists anywhere."""
+        state = self._jlog(wf).state()
+        if not state.get("workflow") and not state.get("jobs"):
+            raise FileNotFoundError(self._journal_name(wf))
+        return copy.deepcopy(state)
 
     # ---- placement: byte-weighted data affinity ----------------------
     def _place(self, job: JobSpec, wf: str) -> List[str]:
@@ -280,11 +337,13 @@ class WorkflowScheduler:
             raise ValueError("duplicate job names in workflow")
         result = WorkflowResult(wf)
         journal = {"workflow": wf, "status": "running", "jobs": {}}
+        self._journal_append(wf, {"op": "begin", "workflow": wf})
         for jname, entry in (_pre_done or {}).items():
             journal["jobs"][jname] = entry
             result[jname] = {}  # outputs live in the catalog, not DRAM
             result.skipped.append(jname)
-        self._journal_put(wf, journal)
+            self._journal_append(wf, {"op": "job", "name": jname,
+                                      "entry": entry})
 
         cap = max_concurrent if max_concurrent else len(self.nodes)
         pending = [j for j in jobs if j.name not in journal["jobs"]]
@@ -296,9 +355,12 @@ class WorkflowScheduler:
 
         def fail(jname: str, exc: Exception):
             journal["status"] = "failed"
-            journal.setdefault("jobs", {})[jname] = {
-                "status": "failed", "error": str(exc), "ts": time.time()}
-            self._journal_put(wf, journal)
+            entry = {"status": "failed", "error": str(exc),
+                     "ts": time.time()}
+            journal.setdefault("jobs", {})[jname] = entry
+            self._journal_append(wf, {"op": "job", "name": jname,
+                                      "entry": entry})
+            self._journal_append(wf, {"op": "status", "status": "failed"})
             # join the rest so no worker is left mutating state after
             # the caller sees the failure
             for name, (fut, _j, nodes, leases) in inflight.items():
@@ -388,12 +450,14 @@ class WorkflowScheduler:
                 outputs, versions = fut.result()
                 result[name] = outputs
                 done.add(name)
-                journal["jobs"][name] = {
+                entry = {
                     "status": "done", "nodes": nodes,
                     "outputs": versions,
                     "retained": sorted(job.retain),
                     "drain": sorted(job.drain), "ts": time.time()}
-                self._journal_put(wf, journal)
+                journal["jobs"][name] = entry
+                self._journal_append(wf, {"op": "job", "name": name,
+                                          "entry": entry})
                 for oname in job.drain:
                     try:
                         rec = self.catalog.record(oname, wf,
@@ -424,13 +488,13 @@ class WorkflowScheduler:
                 drain_errors.append((oname, e))
         if drain_errors:
             journal["status"] = "failed"
-            self._journal_put(wf, journal)
+            self._journal_append(wf, {"op": "status", "status": "failed"})
             oname, err = drain_errors[0]
             raise RuntimeError(
                 f"workflow {wf}: drain of final output {oname} "
                 f"failed") from err
         journal["status"] = "done"
-        self._journal_put(wf, journal)
+        self._journal_append(wf, {"op": "status", "status": "done"})
         return result
 
     def _release(self, nodes: List[str], leases: List[Lease]) -> None:

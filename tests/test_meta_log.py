@@ -1,0 +1,334 @@
+"""MetaLog: the append-only replicated metadata log (ROADMAP item 3).
+
+Covers the log primitive itself (append/replay/compaction/reseed, torn
+tails, crash windows), the pmem grow/rename plumbing it rides on, the
+torn-JSON tolerance of the legacy read paths it replaced, and the
+single-writer lease race the catalog's log serialises.
+"""
+import json
+import random
+import threading
+
+import pytest
+
+from repro.core.dataset_exchange import DatasetCatalog
+from repro.core.meta_log import (HDR_SIZE, KIND_EVENT, MIN_CAPACITY,
+                                 MetaLog, _pack_entry)
+
+
+def _fold_kv(state, ev):
+    """Reference reducer: the kind of keyed upsert/delete every ported
+    surface is a variant of."""
+    op = ev["op"]
+    if op == "set":
+        state[ev["k"]] = {"v": ev["v"], "ts": ev["ts"]}
+    elif op == "incr":
+        rec = dict(state.get(ev["k"]) or {"v": 0})
+        rec["v"] = rec.get("v", 0) + ev["n"]
+        rec["ts"] = ev["ts"]
+        state[ev["k"]] = rec
+    elif op == "del":
+        state.pop(ev["k"], None)
+
+
+def _log(cluster, name="test/log", **kw):
+    return MetaLog(cluster.stores, cluster.node_ids, name,
+                   fold=_fold_kv, **kw)
+
+
+# ---- the log primitive -----------------------------------------------
+
+def test_append_then_fresh_replay_roundtrip(cluster):
+    log = _log(cluster)
+    for i in range(20):
+        log.append({"op": "set", "k": f"k{i % 5}", "v": i})
+    head = log.state()
+    assert set(head) == {f"k{i}" for i in range(5)}
+    assert head["k4"]["v"] == 19
+    # a brand-new instance (cold replay from the pool copies) agrees
+    assert _log(cluster).state() == head
+
+
+def test_replay_unions_entries_across_node_loss(cluster):
+    log = _log(cluster)
+    log.append({"op": "set", "k": "a", "v": 1})
+    cluster.kill_node("node3")
+    log.append({"op": "set", "k": "b", "v": 2})
+    cluster.kill_node("node0")
+    log.append({"op": "set", "k": "c", "v": 3})
+    head = log.state()
+    replayed = _log(cluster).state()
+    assert replayed == head
+    assert {k: r["v"] for k, r in replayed.items()} == \
+        {"a": 1, "b": 2, "c": 3}
+
+
+def test_rejoined_pool_is_reseeded_and_self_sufficient(cluster):
+    log = _log(cluster)
+    log.append({"op": "set", "k": "a", "v": 1})
+    # node2's pmem goes unreachable (transient): it misses appends
+    cluster.pools["node2"]._dead = True
+    log.append({"op": "set", "k": "b", "v": 2})
+    log.append({"op": "incr", "k": "a", "n": 10})
+    # rejoin: the next append must reseed node2 with a full snapshot
+    cluster.pools["node2"]._dead = False
+    log.append({"op": "set", "k": "c", "v": 3})
+    assert log.stats["reseeds"] >= 1
+    # node2's copy ALONE now replays the complete state
+    solo = MetaLog({"node2": cluster.stores["node2"]}, ["node2"],
+                   "test/log", fold=_fold_kv)
+    head = log.state()
+    assert solo.state() == head
+    assert head["a"]["v"] == 11
+
+
+def test_torn_append_past_committed_tail_is_invisible(cluster):
+    log = _log(cluster)
+    log.append({"op": "set", "k": "a", "v": 1})
+    head = dict(log.state())
+    # simulate a torn append on every copy: entry bytes land but the
+    # crash hits before the committed tail advances
+    import numpy as np
+    torn = _pack_entry(99, KIND_EVENT,
+                       json.dumps({"op": "set", "k": "zz"}).encode()[:7])
+    for nid in cluster.node_ids:
+        pool = cluster.pools[nid]
+        region = pool.open("test/log")
+        tail = int.from_bytes(bytes(region.read(8, 8)), "little")
+        region.write(tail, np.frombuffer(torn, dtype=np.uint8))
+        region.flush()
+    assert _log(cluster).state() == head
+
+
+def test_compaction_bounds_replay_bytes(cluster):
+    log = _log(cluster)
+    for i in range(200):
+        log.append({"op": "set", "k": f"k{i % 10}", "v": i})
+    head = json.loads(json.dumps(log.state()))
+    log.compact()
+    fresh = _log(cluster)
+    assert fresh.state() == head
+    # replay after compaction reads ~one snapshot body plus headers,
+    # NOT one body per replica (the acceptance bound: < 2x snapshot)
+    assert fresh.stats["replay_bytes"] < 2 * log.stats["snapshot_bytes"]
+
+
+def test_mid_compaction_crash_leaves_log_replayable(cluster):
+    log = _log(cluster)
+    for i in range(30):
+        log.append({"op": "set", "k": f"k{i % 3}", "v": i})
+    head = json.loads(json.dumps(log.state()))
+    # crash in the worst window: snapshot written + acked on every pool
+    # but NOT yet renamed over the live log
+    log.compact(_crash_after_snapshot=True)
+    for nid in cluster.node_ids:
+        assert cluster.pools[nid].exists("test/log.cnew")  # orphan ack
+        assert cluster.pools[nid].exists("test/log")       # old log intact
+    fresh = _log(cluster)
+    assert fresh.state() == head
+    # the restarted writer keeps appending and compacts cleanly later
+    fresh.append({"op": "set", "k": "post", "v": 1})
+    fresh.compact()
+    assert _log(cluster).state()["post"]["v"] == 1
+
+
+def test_append_after_every_pool_dead_raises(cluster):
+    log = _log(cluster)
+    log.append({"op": "set", "k": "a", "v": 1})
+    for nid in cluster.node_ids:
+        cluster.pools[nid]._dead = True
+    with pytest.raises(IOError):
+        log.append({"op": "set", "k": "b", "v": 2})
+
+
+def test_auto_compaction_threshold(cluster):
+    log = _log(cluster, compact_entries=16)
+    for i in range(40):
+        log.append({"op": "set", "k": "k", "v": i})
+    assert log.stats["compactions"] >= 2
+    assert _log(cluster).state()["k"]["v"] == 39
+
+
+# ---- satellite 3: replay == the old read-merge-rewrite state ---------
+
+def test_property_replay_matches_sequential_fold(cluster):
+    """Property-style: a pseudo-random op sequence with interleaved
+    compactions and node loss replays to EXACTLY the state the old
+    read-merge-rewrite path maintained (here: the same reducer applied
+    sequentially to a plain dict — what the single-writer JSON merge
+    returned)."""
+    rng = random.Random(1805_10041)
+    log = _log(cluster, name="prop/log", compact_entries=64)
+    reference: dict = {}
+    killed = []
+    for step in range(300):
+        r = rng.random()
+        if r < 0.05 and len(killed) < 2:
+            nid = rng.choice([n for n in cluster.node_ids
+                              if n not in killed])
+            killed.append(nid)
+            cluster.kill_node(nid)
+            continue
+        if r < 0.10:
+            log.compact()
+            continue
+        k = f"k{rng.randrange(12)}"
+        if r < 0.70:
+            ev = {"op": "set", "k": k, "v": rng.randrange(1000),
+                  "ts": float(step)}
+        elif r < 0.90:
+            ev = {"op": "incr", "k": k, "n": rng.randrange(5),
+                  "ts": float(step)}
+        else:
+            ev = {"op": "del", "k": k, "ts": float(step)}
+        log.append(ev)
+        _fold_kv(reference, ev)
+    assert log.state() == reference
+    fresh = MetaLog(cluster.stores, cluster.node_ids, "prop/log",
+                    fold=_fold_kv)
+    assert fresh.state() == reference
+
+
+def test_legacy_base_seeds_cold_replay(cluster):
+    """Pre-log state (the old replicated JSON) is the replay base until
+    the first snapshot supersedes it."""
+    legacy = {"old": {"v": 7, "ts": 1.0}}
+    log = MetaLog(cluster.stores, cluster.node_ids, "mig/log",
+                  fold=_fold_kv, base=lambda: dict(legacy))
+    log.append({"op": "set", "k": "new", "v": 1})
+    head = log.state()
+    assert head["old"]["v"] == 7 and head["new"]["v"] == 1
+    log.compact()
+    # post-compaction the snapshot carries the migrated state; the base
+    # loader is no longer consulted
+    fresh = MetaLog(cluster.stores, cluster.node_ids, "mig/log",
+                    fold=_fold_kv,
+                    base=lambda: pytest.fail("base read after snapshot"))
+    assert fresh.state() == head
+
+
+# ---- pmem plumbing the log rides on ----------------------------------
+
+def test_pmem_extend_grows_and_preserves(cluster):
+    pool = cluster.pools["node0"]
+    region = pool.create("grow.bin", MIN_CAPACITY)
+    import numpy as np
+    region.write(0, np.arange(64, dtype=np.uint8))
+    region = pool.extend("grow.bin", MIN_CAPACITY * 4)
+    assert region.nbytes == MIN_CAPACITY * 4
+    assert bytes(region.read(0, 64)) == bytes(range(64))
+    # extend is "grow to at least": a smaller target is a no-op
+    assert pool.extend("grow.bin", MIN_CAPACITY).nbytes == \
+        MIN_CAPACITY * 4
+
+
+def test_pmem_rename_atomic_swap_evicts_handles(cluster):
+    pool = cluster.pools["node0"]
+    import numpy as np
+    a = pool.create("swap/a.bin", 4096)
+    a.write(0, np.full(8, 1, dtype=np.uint8))
+    b = pool.create("swap/b.bin", 4096)
+    b.write(0, np.full(8, 2, dtype=np.uint8))
+    pool.rename("swap/b.bin", "swap/a.bin")
+    assert not pool.exists("swap/b.bin")
+    # a reopened handle sees the NEW bytes, not a stale cached mmap
+    assert bytes(pool.open("swap/a.bin").read(0, 8)) == bytes([2] * 8)
+
+
+# ---- satellite 1: torn-JSON tolerance of the legacy read paths -------
+
+def test_put_json_leaves_no_tmp_and_ignores_stale_tmp(cluster):
+    pool = cluster.pools["node0"]
+    # a tmp file a crashed writer left behind must not shadow the commit
+    pool.put_json("meta/rec.json", {"v": 1})
+    tmp = pool._path("meta/rec.json.tmp")
+    tmp.write_text('{"v": 99')  # torn, pre-rename crash remnant
+    pool.put_json("meta/rec.json", {"v": 2})
+    assert pool.get_json("meta/rec.json") == {"v": 2}
+    assert not tmp.exists()  # the rename consumed the fresh tmp
+
+
+def test_catalog_merge_tolerates_torn_legacy_copy(cluster):
+    """Regression: one pool holding half a JSON record (a torn legacy
+    write, pre-``put_json``-atomicity) must not poison the cross-pool
+    merge — the readable copies win."""
+    rec = {"workflow": "w", "name": "ds", "version": 1, "object": "o",
+           "nbytes": 4, "home": "node1", "placement": ["node1"],
+           "ts": 5.0, "leases": {}, "retained": True,
+           "reclaimed": False, "acks": {}}
+    rname = "exch/w/ds@v1.json"
+    for nid in cluster.node_ids:
+        cluster.pools[nid].put_json(rname, rec)
+    # tear node0's copy mid-byte (bypassing put_json's atomic rename)
+    path = cluster.pools["node0"]._path(rname)
+    path.write_text(path.read_text()[: len(path.read_text()) // 2])
+    cat = DatasetCatalog(cluster.stores)
+    merged = cat.record("ds", "w")
+    assert merged["nbytes"] == 4 and merged["home"] == "node1"
+
+
+def test_checkpoint_ack_read_tolerates_torn_legacy_copy(cluster):
+    legacy = {"step": 3, "ts": 1.0, "acks": {"node0": {}},
+              "ring": {}, "delta_base": None}
+    name = "ckpt/acks_step3.json"
+    for nid in cluster.node_ids:
+        cluster.pools[nid].put_json(name, legacy)
+    path = cluster.pools["node2"]._path(name)
+    path.write_text(path.read_text()[:10])
+    rec = cluster.checkpointer.ack_record(3)
+    assert rec is not None and rec["step"] == 3
+
+
+# ---- satellite 2: concurrent acquire/release loses no lease event ----
+
+def test_concurrent_acquire_release_loses_no_lease_events(cluster):
+    """The catalog's single writer serialises lease events through the
+    log: racing acquire/release threads must balance exactly — no lost
+    update (the old read-merge-rewrite could drop a concurrent lease),
+    refcount 0 at the end, and the record still acquirable."""
+    cat = cluster.catalog
+    rec = cat.publish("ds", b"\x00" * 64, workflow="w", node="node0")
+    errors = []
+
+    def worker(i):
+        try:
+            for _ in range(10):
+                lease = cat.acquire("ds", workflow="w",
+                                    owner=f"t{i}", ttl_s=60.0)
+                cat.release(lease)
+        except Exception as e:  # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    head = cat.record("ds", "w", rec["version"])
+    live = [l for l in head["leases"].values()
+            if not l.get("released")]
+    assert cat.refcount("ds", "w", rec["version"]) == 0
+    assert not live
+    # every acquire/release pair survived as events: 40 distinct leases
+    assert len(head["leases"]) == 40
+    # the record is still healthy: a fresh acquire works
+    lease = cat.acquire("ds", workflow="w", owner="after")
+    assert cat.refcount("ds", "w", rec["version"]) == 1
+    cat.release(lease)
+
+
+def test_log_backed_record_replays_identically_in_fresh_catalog(cluster):
+    """The catalog state a fresh process replays from the log equals the
+    live writer's head state (acks, leases, tombstones)."""
+    cat = cluster.catalog
+    cat.publish("ds", b"\x01" * 32, workflow="w", node="node0")
+    lease = cat.acquire("ds", workflow="w", owner="me", ttl_s=60.0)
+    cat.release(lease)
+    cat.unretain("ds", "w")
+    head = cat.record("ds", "w")
+    fresh = DatasetCatalog(cluster.stores).record("ds", "w")
+    assert fresh == head
+    assert fresh["retained"] is False
+    assert head["leases"][lease.lease_id]["released"] is True
