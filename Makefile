@@ -6,7 +6,7 @@ PY ?= python
 SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast bench lint hygiene repair-smoke daemon-smoke metalog-smoke
+.PHONY: verify test-fast bench lint hygiene repair-smoke daemon-smoke metalog-smoke analyze sanitize-smoke
 
 # `time` prefix: suite duration is surfaced wherever verify runs,
 # including the GitHub Actions log (CI calls these targets).
@@ -50,3 +50,17 @@ hygiene:
 lint:
 	$(PY) -m pyflakes src tests benchmarks 2>/dev/null || \
 	$(PY) -m py_compile $$(find src tests benchmarks -name '*.py')
+
+# pmemlint: the pmem data-plane invariant lint (persistence ordering,
+# metadata-only recovery, lock discipline) vs the checked-in baseline.
+# Fails only on NEW findings. CI runs this.
+analyze:
+	$(PY) -m repro.analysis.lint src/repro
+
+# persistence-order sanitizer smoke: the MetaLog + checkpoint crash
+# tests (torn tails, mid-compaction crashes) run under the runtime shim
+# that asserts the committed-tail discipline and catches dirty-region
+# drops. CI runs this.
+sanitize-smoke:
+	$(PY) -m pytest -x -q tests/test_meta_log.py tests/test_checkpoint.py \
+		tests/test_analysis.py --pmem-sanitize

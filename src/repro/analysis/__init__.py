@@ -1,0 +1,24 @@
+"""pmemlint: invariant lint passes + persistence-order sanitizer.
+
+The B-APM programming model (PAPER.md; Weiland et al., arXiv:1805.10041)
+makes correctness an *ordering* problem: byte-granular stores are durable
+only after an explicit flush+fence, so the durability story of the whole
+data plane — committed-tail MetaLog appends, crash-atomic ``put_json``,
+ack-before-report — rests on write/flush/commit ordering that used to
+live only in docstrings. This package checks it mechanically:
+
+  * ``repro.analysis.lint`` — the AST lint driver
+    (``python -m repro.analysis.lint src/repro``) enforcing three
+    invariant families: persistence ordering, metadata-only recovery,
+    and lock discipline (see README.md in this directory).
+  * ``repro.analysis.annotations`` — the ``@metadata_only`` /
+    ``@rehydration_entry`` markers the call-graph pass keys on.
+  * ``repro.analysis.sanitizer`` — a record-and-check shim over
+    ``PMemRegion``/``PMemPool`` that validates the committed-tail
+    discipline at runtime and enumerates torn-write crash states
+    (``pytest --pmem-sanitize`` runs existing crash tests under it).
+"""
+from repro.analysis.annotations import metadata_only, rehydration_entry
+from repro.analysis.sanitizer import PMemSanitizer
+
+__all__ = ["metadata_only", "rehydration_entry", "PMemSanitizer"]

@@ -1,0 +1,47 @@
+"""Invariant annotations the lint passes key on.
+
+Both decorators are runtime no-ops beyond marking the function and
+registering its qualified name — they exist so the *contract* a
+docstring used to state ("this decision path reads metadata only",
+"reads through this entry point are sanctioned copies, not probes")
+is machine-visible. ``repro.analysis.recovery`` reads the decorators
+syntactically from the AST, so applying one is always safe: no import
+cycle, no behavior change, no overhead on the decorated call.
+"""
+from __future__ import annotations
+
+from typing import Callable, Set
+
+#: qualified names (``module.Class.method``) declared metadata-only at
+#: import time — runtime mirror of what the lint derives from the AST
+METADATA_ONLY: Set[str] = set()
+
+#: qualified names of sanctioned rehydration/copy entry points
+REHYDRATION_ENTRIES: Set[str] = set()
+
+
+def _qualname(fn: Callable) -> str:
+    return f"{fn.__module__}.{fn.__qualname__}"
+
+
+def metadata_only(fn: Callable) -> Callable:
+    """Declare that ``fn`` (and everything it transitively calls) makes
+    recovery/placement decisions from persisted *metadata* alone — ack
+    records, catalog records, manifests, journals — and never reads
+    object-store payload bytes except through a function marked
+    ``@rehydration_entry``. The ``metadata-only-read`` lint pass walks
+    the call graph and fails the build when the contract is broken."""
+    fn.__pmem_metadata_only__ = True
+    METADATA_ONLY.add(_qualname(fn))
+    return fn
+
+
+def rehydration_entry(fn: Callable) -> Callable:
+    """Declare ``fn`` a sanctioned data-movement entry point: the object
+    reads it performs (or schedules) are the *sources of copies being
+    made* — replication, drain, stage-in/rehydration — never blind
+    recovery probes. The metadata-only call-graph pass does not traverse
+    into functions carrying this marker."""
+    fn.__pmem_rehydration_entry__ = True
+    REHYDRATION_ENTRIES.add(_qualname(fn))
+    return fn

@@ -28,6 +28,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.annotations import metadata_only
 from repro.core.data_scheduler import (DataScheduler, ExternalStore,
                                        SupersededError)
 from repro.core.dataset_exchange import ack_targets
@@ -154,6 +155,7 @@ class DistributedCheckpointer:
         if not wrote:
             raise IOError(f"no reachable pool for metadata {name}")
 
+    @metadata_only
     def _meta_get_json(self, name: str):
         """Resolve metadata across ALL reachable pools, not just the
         first one that answers: a rejoined node (say node0 back from the
@@ -253,11 +255,16 @@ class DistributedCheckpointer:
         if base_step is not None and self.delta:
             # never rotate onto the slot holding the delta base (cached
             # at save time; cross-pool manifest read only after restart)
-            avoid = self._slot_cache.get(base_step)
+            with self._ack_lock:
+                avoid = self._slot_cache.get(base_step)
             if avoid is None:
                 avoid = self._meta_get_json(
                     f"ckpt/manifest_step{base_step}.json")["slot"]
-                self._slot_cache[base_step] = avoid
+                with self._ack_lock:
+                    # every _slot_cache write holds _ack_lock (lockset
+                    # invariant): ack-recording worker threads trim the
+                    # cache concurrently with the save path
+                    self._slot_cache[base_step] = avoid
         slot = self._alloc_slot(avoid)
         ring = self._live_nodes()
         manifest: Dict[str, Any] = {
@@ -372,6 +379,7 @@ class DistributedCheckpointer:
             log.append({"op": "ack", "step": step, "nid": nid,
                         "kind": kind, "rec": rec})
 
+    @metadata_only
     def ack_record(self, step: int) -> Optional[dict]:
         """The full ack record for ``step`` — ``{"step", "ts", "acks",
         "ring", "delta_base"}`` — from the ack log's folded state, with
@@ -387,6 +395,7 @@ class DistributedCheckpointer:
         except (IOError, FileNotFoundError):
             return None
 
+    @metadata_only
     def acks(self, step: int) -> Dict[str, Dict[str, dict]]:
         """The merged per-node ack map for ``step`` ({} if unknown)."""
         rec_map = self.ack_record(step)
@@ -514,12 +523,14 @@ class DistributedCheckpointer:
         return out
 
     # ------------------------------------------------------------------
+    @metadata_only
     def latest_step(self) -> Optional[int]:
         try:
             return self._meta_get_json("ckpt/latest.json")["step"]
         except (IOError, FileNotFoundError):
             return None
 
+    @metadata_only
     def available_steps(self) -> List[int]:
         """All committed checkpoint steps (manifest present on any
         reachable node), ascending."""
@@ -565,6 +576,7 @@ class DistributedCheckpointer:
             f"no recoverable checkpoint with lost_nodes={list(lost_nodes)}"
         ) from last_err
 
+    @metadata_only
     def _acks_plausible(self, step: int,
                         lost_nodes: Sequence[str]) -> bool:
         """Metadata-only recoverability check — ONE small JSON read:

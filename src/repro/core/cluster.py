@@ -77,9 +77,11 @@ class SimCluster:
         import time
         pool = self.pools[nid]
         pool.fail()  # in-flight async writers now fail fast
-        # an async writer may still be mid-create; retry until clean
+        # an async writer may still be mid-create; retry until clean.
+        # Raw directory removal IS the fault being injected — the one
+        # sanctioned bypass of the PMemRegion discipline.
         for _ in range(50):
-            shutil.rmtree(pool.root, ignore_errors=True)
+            shutil.rmtree(pool.root, ignore_errors=True)  # pmemlint: disable=raw-pool-path
             if not pool.root.exists():
                 break
             time.sleep(0.02)

@@ -22,6 +22,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.analysis.annotations import rehydration_entry
 from repro.core.object_store import PMemObjectStore
 
 
@@ -145,6 +146,7 @@ class DataScheduler:
         return fut
 
     # ---- public channels ----
+    @rehydration_entry
     def stage_in(self, nid: str, external_name: str, obj_name: str,
                  version: int = 0, priority: int = 0,
                  meta: Optional[dict] = None,
@@ -164,6 +166,7 @@ class DataScheduler:
             return man
         return self._submit(nid, go, priority)
 
+    @rehydration_entry
     def drain(self, nid: str, obj_name: str, external_name: str,
               version: int = 0, priority: int = 1,
               delete_after: bool = False,
@@ -198,6 +201,7 @@ class DataScheduler:
             return external_name
         return self._submit(nid, go, priority)
 
+    @rehydration_entry
     def replicate(self, src: str, obj_name: str, dst: str,
                   version: int = 0, priority: int = 2,
                   dst_name: Optional[str] = None,

@@ -81,6 +81,7 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.analysis.annotations import metadata_only
 from repro.core.meta_log import MetaLog
 from repro.core.object_store import PMemObjectStore, content_digest
 
@@ -315,6 +316,7 @@ class DatasetCatalog:
         return best
 
     # ---- versions -----------------------------------------------------
+    @metadata_only
     def versions(self, name: str, workflow: str) -> List[int]:
         """All published versions of (workflow, name), ascending."""
         prefix = f"exch/{workflow}/"
@@ -330,6 +332,7 @@ class DatasetCatalog:
                     out.add(int(base[len(tag):-len(".json")]))
         return sorted(out)
 
+    @metadata_only
     def latest_version(self, name: str, workflow: str) -> Optional[int]:
         # publishes in this process keep the cache current; a cold
         # process (resume) falls through to the replicated pool records
@@ -338,7 +341,10 @@ class DatasetCatalog:
             return v
         vs = self.versions(name, workflow)
         if vs:
-            self._version_cache[(workflow, name)] = vs[-1]
+            with self._lock:
+                # publish writes this cache under the catalog lock; the
+                # cold-path fill must too (lockset discipline)
+                self._version_cache[(workflow, name)] = vs[-1]
         return vs[-1] if vs else None
 
     def exists(self, name: str, workflow: str) -> bool:
@@ -443,6 +449,7 @@ class DatasetCatalog:
             return self._log.state()[rname]
 
     # ---- read path ----------------------------------------------------
+    @metadata_only
     def record(self, name: str, workflow: str = "default",
                version: Optional[int] = None) -> dict:
         if version is None:
@@ -497,6 +504,7 @@ class DatasetCatalog:
             f"unreadable and no replica found") from last
 
     # ---- recoverability (metadata only — the resume contract) ---------
+    @metadata_only
     def recoverable(self, name: str, workflow: str = "default",
                     version: Optional[int] = None,
                     lost_nodes: Sequence[str] = ()) -> bool:

@@ -467,5 +467,8 @@ class MetaLog:
         other = MetaLog(self.stores, self.nodes, self.name,
                         fold=self._fold, base=self._base)
         replayed = other.state()
-        self.stats["replay_bytes"] = other.stats["replay_bytes"]
+        with self._lock:
+            # stats writes elsewhere hold the append lock; a replay
+            # racing a foreground append must not tear the dict
+            self.stats["replay_bytes"] = other.stats["replay_bytes"]
         return replayed

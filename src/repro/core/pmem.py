@@ -18,6 +18,7 @@ import os
 import tempfile
 import threading
 import time
+import warnings
 from pathlib import Path
 from typing import Dict, Iterator, Optional
 
@@ -58,6 +59,13 @@ class PMemRegion:
         out = raw.view(dtype)
         return out.reshape(shape) if shape is not None else out
 
+    @property
+    def dirty(self) -> bool:
+        """True while stores issued since the last ``flush()`` may still
+        be sitting in the (emulated) CPU caches — i.e. bytes that a
+        crash right now is allowed to lose."""
+        return not self._flushed
+
     def flush(self) -> None:
         """CLWB+SFENCE analogue: force bytes to the persistent medium."""
         self._mm.flush()
@@ -78,7 +86,8 @@ class PMemRegion:
                              shape=(nbytes,))
 
     def close(self) -> None:
-        self.flush()
+        if self.dirty:
+            self.flush()
         del self._mm
 
 
@@ -95,6 +104,12 @@ class PMemPool:
         self._open: Dict[str, PMemRegion] = {}
         self._lock = threading.RLock()
         self._dead = False
+        # put_json commits whose parent-directory fsync the filesystem
+        # refused: the rename itself still happened, but its durability
+        # is at the mercy of the journal. Counted (and warned once) so
+        # a degraded mount is visible instead of silently best-effort.
+        self.dir_fsync_failures = 0
+        self._dir_fsync_warned = False
 
     @property
     def alive(self) -> bool:
@@ -248,7 +263,18 @@ class PMemPool:
             finally:
                 os.close(dfd)
         except OSError:
-            pass  # some filesystems refuse directory fsync — best effort
+            # some filesystems refuse directory fsync; the commit is
+            # still atomic (rename happened), only its durability
+            # ordering is weakened — account for it instead of hiding it
+            self.dir_fsync_failures += 1
+            if not self._dir_fsync_warned:
+                self._dir_fsync_warned = True
+                warnings.warn(
+                    f"pmem pool {self.node_id}: parent-directory fsync "
+                    f"failed for {name!r}; metadata commits on this "
+                    f"mount are rename-atomic but not "
+                    f"durability-ordered (counted in "
+                    f"dir_fsync_failures)", RuntimeWarning)
 
     def get_json(self, name: str):
         self._check_alive()

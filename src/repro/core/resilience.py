@@ -40,7 +40,10 @@ class Heartbeat:
             self.stores[nid].pool.put_json(
                 "hb/heartbeat.json", {"ts": time.time(), "step": step})
         except IOError:
-            pass  # unreachable pmem == the node is dead; it stops beating
+            # Not a swallowed durability failure: an unreachable pmem
+            # means the node is dead, and a dead node STOPPING its
+            # heartbeat is exactly the signal the monitor consumes.
+            pass  # pmemlint: disable=silent-swallow
 
     def read(self, nid: str) -> Optional[dict]:
         try:

@@ -173,6 +173,7 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
+from repro.analysis.annotations import metadata_only, rehydration_entry
 from repro.core.checkpoint import DistributedCheckpointer
 from repro.core.data_scheduler import DataScheduler, SupersededError
 from repro.core.dataset_exchange import ack_targets, read_json_copies
@@ -225,6 +226,7 @@ class SaveTicket:
                 errors.append(e)
         return errors
 
+    @metadata_only
     def durability(self) -> str:
         """Acknowledged durability of this save (DURABILITY_LEVELS).
         Reads the persisted ack map, so it stays truthful after the
@@ -249,6 +251,7 @@ class SaveTicket:
 _LEVEL_RANK = {lvl: i for i, lvl in enumerate(DURABILITY_LEVELS)}
 
 
+@metadata_only
 def _acked_level(ckpt: DistributedCheckpointer, step: int,
                  ring: Sequence[str], delta_base: Optional[int]) -> str:
     acks = ckpt.acks(step)
@@ -289,6 +292,7 @@ class ReplicationChannel:
         self.checkpointer = checkpointer
         self.scheduler = scheduler
 
+    @rehydration_entry
     def submit(self, manifest: dict, *, drain: bool = False,
                sink: Optional[List[Future]] = None) -> List[Future]:
         ckpt = self.checkpointer
@@ -315,6 +319,7 @@ class ReplicationChannel:
             sink.extend(futs)
         return futs
 
+    @rehydration_entry
     def replicate_object(self, src: str, name: str, dst: str,
                          dst_name: Optional[str] = None,
                          expect_meta: Optional[dict] = None,
@@ -351,6 +356,7 @@ class ExchangeChannel:
         self.scheduler = scheduler
         self._track = track  # TieredIO future-tracking hook
 
+    @rehydration_entry
     def submit(self, src: str, obj: str, dst: str, *, version: int = 0,
                dst_name: Optional[str] = None,
                expect_meta: Optional[dict] = None,
@@ -499,6 +505,7 @@ class RepairChannel:
             sorted(self.tiered.scheduler.stores)
         return [n for n in nodes if n not in lost]
 
+    @metadata_only
     def _plan(self, home: str, targets: Sequence[str], lost: Set[str],
               live: Sequence[str], report: dict, *,
               drain_ok: bool = False
@@ -546,6 +553,7 @@ class RepairChannel:
         return None
 
     # ---- the scan ----------------------------------------------------
+    @metadata_only
     def repair(self, lost_nodes: Sequence[str], *,
                max_inflight: Optional[int] = None,
                priority: Optional[int] = None,
@@ -627,6 +635,7 @@ class RepairChannel:
                 report["repaired"].append(
                     (p["surface"], p["obj"], p["survivor"], p["new"]))
 
+    @metadata_only
     def _scan_checkpoints(self, lost: Set[str], live: List[str],
                           report: dict, plans: "collections.deque", *,
                           priority: Optional[int],
@@ -751,6 +760,7 @@ class RepairChannel:
                     on_complete=ack_pair, **prio)}
         plans.append(stage)
 
+    @metadata_only
     def _scan_dlm(self, lost: Set[str], live: List[str],
                   report: dict, plans: "collections.deque", *,
                   priority: Optional[int]) -> None:
@@ -779,6 +789,7 @@ class RepairChannel:
                               s, so, n, dst_name=f"replica/{h}/{nm}",
                               on_complete=a, **prio)})
 
+    @metadata_only
     def _scan_datasets(self, lost: Set[str], live: List[str],
                        report: dict, plans: "collections.deque", *,
                        priority: Optional[int]) -> None:

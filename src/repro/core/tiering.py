@@ -38,6 +38,10 @@ class SLMTier:
         self.name = name
         self._placed: Dict[str, int] = {}  # leaf path -> version tag
         self._version: Optional[int] = None  # store version of last offload
+        # superseded-version reclaims that failed (leaked pmem bytes);
+        # surfaced so operators can see garbage accumulating instead of
+        # the failure vanishing in an except
+        self.cleanup_failures = 0
 
     def offload(self, tree, leaf_paths: Iterable[str]):
         """Move selected leaves to pmem; returns (resident_tree, handle).
@@ -66,7 +70,10 @@ class SLMTier:
             try:
                 self.store.delete(f"slm/{self.name}", prev)
             except OSError:
-                pass
+                # the NEW version is already committed (head points at
+                # it); a failed reclaim only leaks the old bytes —
+                # count it rather than losing the signal
+                self.cleanup_failures += 1
         self._version = version
         resident = {p: v for p, v in leaves.items() if p not in paths}
         self._placed = {p: version for p in off}

@@ -62,6 +62,7 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.analysis.annotations import metadata_only
 from repro.core.data_scheduler import (DataScheduler, ExternalStore,
                                        SupersededError)
 from repro.core.dataset_exchange import (DatasetCatalog, EXTERNAL_INPUT,
@@ -172,6 +173,7 @@ class WorkflowScheduler:
     def _live(self) -> List[str]:
         return live_pools(self.stores, self.nodes)
 
+    @metadata_only
     def _legacy_journal(self, wf: str) -> dict:
         """Merged pre-log ``journal.json`` copies (the old read path) —
         the replay base for workflows begun before the MetaLog port."""
@@ -204,6 +206,7 @@ class WorkflowScheduler:
         with self._jlog_lock:
             self._jlog(wf).append(ev)
 
+    @metadata_only
     def journal(self, wf: str) -> dict:
         """The workflow journal folded from its replicated MetaLog:
         per-job entries in log order (latest event per job wins), the

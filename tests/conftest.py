@@ -9,18 +9,28 @@ import pytest
 # device count. Multi-device distributed tests run in subprocesses
 # (tests/test_distributed.py) with their own device-count env.
 
-if importlib.util.find_spec("pytest_timeout") is None:
-    # Fallback for environments without the pytest-timeout plugin
-    # (requirements-dev installs it in CI): register the ini options so
-    # pytest.ini parses cleanly, and enforce the per-test budget with
-    # SIGALRM so a deadlocked worker still fails instead of hanging.
-    def pytest_addoption(parser):
+_HAVE_PYTEST_TIMEOUT = importlib.util.find_spec("pytest_timeout") is not None
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--pmem-sanitize", action="store_true", default=False,
+        help="run every test under the pmem persistence-order sanitizer "
+             "(repro.analysis.sanitizer): committed-tail discipline and "
+             "dirty-region drops become test failures")
+    if not _HAVE_PYTEST_TIMEOUT:
+        # Fallback for environments without the pytest-timeout plugin
+        # (requirements-dev installs it in CI): register the ini options
+        # so pytest.ini parses cleanly; the SIGALRM fixture below
+        # enforces the per-test budget.
         parser.addini("timeout", "per-test timeout in seconds (fallback "
                                  "shim; install pytest-timeout for the "
                                  "real plugin)")
         parser.addini("timeout_method", "ignored by the fallback shim "
                                         "(SIGALRM only)")
 
+
+if not _HAVE_PYTEST_TIMEOUT:
     @pytest.fixture(autouse=True)
     def _fallback_timeout(request):
         import signal
@@ -43,6 +53,38 @@ if importlib.util.find_spec("pytest_timeout") is None:
         finally:
             signal.alarm(0)
             signal.signal(signal.SIGALRM, old)
+
+
+@pytest.fixture(autouse=True)
+def _pmem_sanitize(request):
+    """With ``--pmem-sanitize``: every test runs under the persistence-
+    order sanitizer. Installed before (and torn down after) the other
+    function-scope fixtures, so cluster shutdown happens inside the
+    shimmed window and teardown-dirty regions are caught. Violations
+    surface as a teardown error for the offending test."""
+    if not request.config.getoption("--pmem-sanitize"):
+        yield None
+        return
+    from repro.analysis.sanitizer import PMemSanitizer
+    san = PMemSanitizer().install()
+    try:
+        yield san
+    finally:
+        san.uninstall()
+    san.raise_violations()
+
+
+@pytest.fixture()
+def pmem_sanitizer():
+    """Explicit capture-mode sanitizer for crash-state enumeration tests
+    (records written bytes so ``crash_images()`` works)."""
+    from repro.analysis.sanitizer import PMemSanitizer
+    san = PMemSanitizer(capture=True).install()
+    try:
+        yield san
+    finally:
+        san.uninstall()
+    san.raise_violations()
 
 
 @pytest.fixture()

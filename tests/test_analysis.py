@@ -1,0 +1,552 @@
+"""Tests for repro.analysis: pmemlint golden fixtures + the sanitizer.
+
+Lint tests feed each rule a known-bad snippet (must flag) and a clean
+sibling (must not). Sanitizer tests drive real ``PMemPool``/``MetaLog``
+objects through the shim: the committed-tail discipline is checked live,
+and ``crash_images`` + ``MetaLog`` replay prove every reachable crash
+state recovers to a committed prefix of the appended events.
+"""
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import locks, persistence, recovery
+from repro.analysis.core import collect
+from repro.analysis.lint import main as lint_main
+from repro.analysis.sanitizer import PMemSanitizer
+from repro.core.meta_log import MetaLog
+from repro.core.object_store import PMemObjectStore
+from repro.core.pmem import PMemPool
+
+ALL_PASSES = (persistence.run, recovery.run, locks.run)
+
+
+def _findings(tmp_path, source, passes=ALL_PASSES, fname="snippet.py"):
+    f = tmp_path / fname
+    f.write_text(textwrap.dedent(source))
+    mods = collect([f], tmp_path)
+    out = []
+    for p in passes:
+        out.extend(p(mods))
+    return out
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---- family (a): persistence ordering --------------------------------
+
+def test_missing_flush_flagged(tmp_path):
+    found = _findings(tmp_path, """
+        def write_no_flush(pool, data):
+            region = pool.create("x", 64)
+            region.write(0, data)
+    """)
+    assert "missing-flush" in _rules(found)
+
+
+def test_write_then_flush_clean(tmp_path):
+    found = _findings(tmp_path, """
+        def write_flush(pool, data):
+            region = pool.create("x", 64)
+            region.write(0, data)
+            region.flush()
+    """)
+    assert not found
+
+
+def test_commit_before_flush_flagged(tmp_path):
+    found = _findings(tmp_path, """
+        def commit_unflushed(pool, data):
+            region = pool.open("x")
+            region.write(0, data)
+            pool.put_json("m.json", {"ok": 1})
+    """)
+    assert "commit-before-flush" in _rules(found)
+
+
+def test_tail_advance_without_flush_flagged(tmp_path):
+    # the MetaLog bug class: entry bytes -> tail advance, no flush between
+    found = _findings(tmp_path, """
+        _TAIL_OFF = 8
+
+        def torn_append(pool, blob, tail_bytes):
+            region = pool.open("log")
+            region.write(64, blob)
+            region.write(_TAIL_OFF, tail_bytes)
+            region.flush()
+    """)
+    assert "commit-before-flush" in _rules(found)
+
+
+def test_disciplined_append_clean(tmp_path):
+    found = _findings(tmp_path, """
+        _TAIL_OFF = 8
+
+        def good_append(pool, blob, tail_bytes):
+            region = pool.open("log")
+            region.write(64, blob)
+            region.flush()
+            region.write(_TAIL_OFF, tail_bytes)
+            region.flush()
+    """)
+    assert not found
+
+
+def test_raw_pool_path_flagged_and_suppressible(tmp_path):
+    bad = _findings(tmp_path, """
+        def raw_touch(pool):
+            with open(pool.root / "obj.bin", "wb") as f:
+                f.write(b"x")
+    """)
+    assert "raw-pool-path" in _rules(bad)
+    ok = _findings(tmp_path, """
+        def raw_touch(pool):
+            with open(pool.root / "obj.bin", "wb") as f:  # pmemlint: disable=raw-pool-path
+                f.write(b"x")
+    """, fname="suppressed.py")
+    assert "raw-pool-path" not in _rules(ok)
+
+
+def test_silent_swallow_flagged(tmp_path):
+    found = _findings(tmp_path, """
+        def persist(pool, obj):
+            try:
+                pool.put_json("m.json", obj)
+            except IOError:
+                pass
+    """)
+    assert "silent-swallow" in _rules(found)
+
+
+def test_accounted_failure_clean(tmp_path):
+    found = _findings(tmp_path, """
+        def persist(pool, obj, stats):
+            try:
+                pool.put_json("m.json", obj)
+            except IOError:
+                stats["put_failures"] += 1
+    """)
+    assert "silent-swallow" not in _rules(found)
+
+
+# ---- family (b): metadata-only recovery ------------------------------
+
+def test_metadata_only_direct_read_flagged(tmp_path):
+    found = _findings(tmp_path, """
+        from repro.analysis.annotations import metadata_only
+
+        class Catalog:
+            @metadata_only
+            def decide(self):
+                return self.store.get("obj")
+    """)
+    assert "metadata-only-read" in _rules(found)
+
+
+def test_metadata_only_transitive_read_flagged(tmp_path):
+    found = _findings(tmp_path, """
+        from repro.analysis.annotations import metadata_only
+
+        class Catalog:
+            @metadata_only
+            def decide(self):
+                return self._probe()
+
+            def _probe(self):
+                return self.store.get("obj")
+    """)
+    hits = [f for f in found if f.rule == "metadata-only-read"]
+    assert hits
+    # the finding anchors at the annotated root with a witness path
+    assert hits[0].func == "Catalog.decide"
+    assert "_probe" in hits[0].message
+
+
+def test_metadata_only_stops_at_rehydration_entry(tmp_path):
+    found = _findings(tmp_path, """
+        from repro.analysis.annotations import metadata_only, \\
+            rehydration_entry
+
+        class Catalog:
+            @metadata_only
+            def decide(self):
+                return self._copy()
+
+            @rehydration_entry
+            def _copy(self):
+                return self.store.get("obj")
+    """)
+    assert "metadata-only-read" not in _rules(found)
+
+
+def test_metadata_only_plain_dict_get_clean(tmp_path):
+    found = _findings(tmp_path, """
+        from repro.analysis.annotations import metadata_only
+
+        class Catalog:
+            @metadata_only
+            def decide(self, rec):
+                return rec.get("acks")
+    """)
+    assert "metadata-only-read" not in _rules(found)
+
+
+def test_metadata_only_closure_read_flagged(tmp_path):
+    # closures run in this flow (submitted as callbacks) — reads inside
+    # them count against the encloser's promise
+    found = _findings(tmp_path, """
+        from repro.analysis.annotations import metadata_only
+
+        class Catalog:
+            @metadata_only
+            def decide(self):
+                def go():
+                    return self.store.get("obj")
+                return go
+    """)
+    assert "metadata-only-read" in _rules(found)
+
+
+# ---- family (c): lock discipline -------------------------------------
+
+def test_unguarded_write_flagged(tmp_path):
+    found = _findings(tmp_path, """
+        import threading
+
+        class Registry:
+            def __init__(self):
+                self.lock = threading.Lock()
+                self.cache = {}
+
+            def put(self, k, v):
+                with self.lock:
+                    self.cache[k] = v
+
+            def fill(self, k, v):
+                self.cache[k] = v
+    """)
+    hits = [f for f in found if f.rule == "unguarded-write"]
+    assert hits and hits[0].func == "Registry.fill"
+
+
+def test_lock_held_helper_clean(tmp_path):
+    # the repo's "Lock held." private-helper idiom must not false-positive
+    found = _findings(tmp_path, """
+        import threading
+
+        class Registry:
+            def __init__(self):
+                self.lock = threading.Lock()
+                self.cache = {}
+
+            def put(self, k, v):
+                with self.lock:
+                    self._insert(k, v)
+
+            def drop(self, k):
+                with self.lock:
+                    self._insert(k, None)
+
+            def _insert(self, k, v):
+                self.cache[k] = v
+    """)
+    assert "unguarded-write" not in _rules(found)
+
+
+def test_closure_write_counts_as_unguarded(tmp_path):
+    # a closure defined under the lock runs later on a worker thread
+    found = _findings(tmp_path, """
+        import threading
+
+        class Registry:
+            def __init__(self):
+                self.lock = threading.Lock()
+                self.acked = {}
+
+            def put(self, k, v):
+                with self.lock:
+                    self.acked[k] = v
+
+            def make_callback(self, k):
+                def cb(result):
+                    self.acked[k] = result
+                return cb
+    """)
+    assert "unguarded-write" in _rules(found)
+
+
+def test_blocking_under_lock_flagged(tmp_path):
+    found = _findings(tmp_path, """
+        import threading
+
+        class Channel:
+            def __init__(self):
+                self.lock = threading.Lock()
+
+            def flush_one(self, fut):
+                with self.lock:
+                    return fut.result()
+    """)
+    assert "blocking-under-lock" in _rules(found)
+
+
+def test_blocking_outside_lock_clean(tmp_path):
+    found = _findings(tmp_path, """
+        import threading
+
+        class Channel:
+            def __init__(self):
+                self.lock = threading.Lock()
+                self.n = 0
+
+            def flush_one(self, fut):
+                with self.lock:
+                    self.n += 1
+                return fut.result()
+    """)
+    assert "blocking-under-lock" not in _rules(found)
+
+
+def test_string_join_not_blocking(tmp_path):
+    found = _findings(tmp_path, """
+        import threading
+
+        class Fmt:
+            def __init__(self):
+                self.lock = threading.Lock()
+
+            def render(self, parts):
+                with self.lock:
+                    return b"".join(parts)
+    """)
+    assert "blocking-under-lock" not in _rules(found)
+
+
+# ---- driver: baseline + exit codes -----------------------------------
+
+def test_lint_main_baseline_roundtrip(tmp_path, capsys):
+    snip = tmp_path / "bad.py"
+    snip.write_text(textwrap.dedent("""
+        def write_no_flush(pool, data):
+            region = pool.create("x", 64)
+            region.write(0, data)
+    """))
+    base = tmp_path / "baseline.json"
+    # raw: the finding fails the run
+    assert lint_main([str(snip), "--no-baseline"]) == 1
+    # baseline it: subsequent runs pass, the finding is reported as known
+    assert lint_main([str(snip), "--baseline", str(base),
+                      "--update-baseline"]) == 0
+    assert lint_main([str(snip), "--baseline", str(base)]) == 0
+    # a NEW finding still fails against that baseline
+    snip.write_text(snip.read_text() + textwrap.dedent("""
+        def persist(pool, obj):
+            try:
+                pool.put_json("m.json", obj)
+            except IOError:
+                pass
+    """))
+    assert lint_main([str(snip), "--baseline", str(base)]) == 1
+
+
+def test_repo_is_lint_clean_vs_baseline():
+    """The shipped tree must pass its own lint against the checked-in
+    baseline — the same invocation `make analyze` / CI runs."""
+    root = Path(__file__).resolve().parent.parent
+    target = root / "src" / "repro"
+    assert target.is_dir()
+    assert lint_main([str(target)]) == 0
+
+
+# ---- sanitizer: live ordering checks ---------------------------------
+
+_MAGIC = b"MLOG1\x00"
+
+
+def _mk_pool(path):
+    return PMemPool(path, "node0", capacity_bytes=1 << 24)
+
+
+def _absolve(outer):
+    """Tests below stage violations ON PURPOSE. When the whole suite
+    runs under ``--pmem-sanitize`` the autouse shim records them too —
+    clear it so the deliberate bad sequence doesn't fail the run."""
+    if outer is not None:
+        outer.violations.clear()
+        for st in outer.regions.values():
+            st.dirty = False
+
+
+def test_sanitizer_flags_tail_advance_over_unflushed(tmp_path,
+                                                     _pmem_sanitize):
+    san = PMemSanitizer().install()
+    try:
+        pool = _mk_pool(tmp_path)
+        region = pool.create("t/log", 4096)
+        region.write(0, np.frombuffer(_MAGIC, dtype=np.uint8))
+        region.flush()
+        # entry bytes land but are NOT flushed before the tail advance
+        region.write(64, np.full(16, 7, dtype=np.uint8))
+        region.write(8, np.frombuffer((80).to_bytes(8, "little"),
+                                      dtype=np.uint8))
+        region.flush()
+    finally:
+        san.uninstall()
+    assert any("committed-tail" in v for v in san.violations)
+    with pytest.raises(AssertionError, match="committed-tail"):
+        san.raise_violations()
+    _absolve(_pmem_sanitize)
+
+
+def test_sanitizer_accepts_disciplined_append(tmp_path):
+    san = PMemSanitizer().install()
+    try:
+        pool = _mk_pool(tmp_path)
+        region = pool.create("t/log", 4096)
+        region.write(0, np.frombuffer(_MAGIC, dtype=np.uint8))
+        region.flush()
+        region.write(64, np.full(16, 7, dtype=np.uint8))
+        region.flush()  # entry durable BEFORE the tail moves
+        region.write(8, np.frombuffer((80).to_bytes(8, "little"),
+                                      dtype=np.uint8))
+        region.flush()
+    finally:
+        san.uninstall()
+    assert san.violations == []
+    san.raise_violations()
+
+
+def test_sanitizer_flags_dirty_close(tmp_path, _pmem_sanitize):
+    san = PMemSanitizer().install()
+    try:
+        pool = _mk_pool(tmp_path)
+        region = pool.create("t/x", 64)
+        region.write(0, np.full(8, 1, dtype=np.uint8))
+        region.close()  # close() flushes, but a crash never calls close
+    finally:
+        san.uninstall()
+    assert any("dirty-close" in v for v in san.violations)
+    _absolve(_pmem_sanitize)
+
+
+def test_sanitizer_flags_dirty_delete(tmp_path, _pmem_sanitize):
+    san = PMemSanitizer().install()
+    try:
+        pool = _mk_pool(tmp_path)
+        region = pool.create("t/x", 64)
+        region.write(0, np.full(8, 1, dtype=np.uint8))
+        pool.delete("t/x")
+    finally:
+        san.uninstall()
+    assert any("dirty-drop" in v for v in san.violations)
+    _absolve(_pmem_sanitize)
+
+
+def test_metalog_append_passes_sanitizer(tmp_path):
+    """The real MetaLog append path (entry -> flush -> tail -> flush)
+    must run violation-free under the sanitizer."""
+    san = PMemSanitizer().install()
+    try:
+        pool = _mk_pool(tmp_path)
+        stores = {"node0": PMemObjectStore(pool)}
+
+        def fold(state, ev):
+            state[str(ev["i"])] = ev["v"]
+
+        log = MetaLog(stores, ["node0"], "t/log", fold=fold)
+        for i in range(6):
+            log.append({"i": i, "v": i * 10})
+        assert log.state() == {str(i): i * 10 for i in range(6)}
+    finally:
+        san.uninstall()
+    san.raise_violations()
+
+
+# ---- sanitizer: crash-state enumeration ------------------------------
+
+def test_crash_images_replay_to_committed_prefix(tmp_path):
+    """Every reachable crash state of a MetaLog append sequence —
+    unflushed stores lost, persisted early, or the final store torn —
+    must replay to a committed PREFIX of the appended events (possibly
+    empty), never a torn or reordered mix."""
+    san = PMemSanitizer(capture=True).install()
+    try:
+        pool = _mk_pool(tmp_path / "live")
+        stores = {"node0": PMemObjectStore(pool)}
+
+        def fold(state, ev):
+            state[str(ev["i"])] = ev["v"]
+
+        log = MetaLog(stores, ["node0"], "t/log", fold=fold)
+        n = 4
+        for i in range(n):
+            log.append({"i": i, "v": i * 10})
+    finally:
+        san.uninstall()
+    san.raise_violations()
+
+    prefixes = [{str(j): j * 10 for j in range(k)} for k in range(n + 1)]
+    images = list(san.crash_images("t/log"))
+    assert len(images) >= 3 * n  # >= one write per append, 3 states each
+    reached = set()
+    for label, img in images:
+        rpool = _mk_pool(tmp_path / "replay")
+        PMemSanitizer.materialize(img, rpool, "t/log")
+        rlog = MetaLog({"node0": PMemObjectStore(rpool)}, ["node0"],
+                       "t/log", fold=fold)
+        state = dict(rlog.state())
+        assert state in prefixes, \
+            f"crash state {label} replayed to non-prefix {state}"
+        reached.add(len(state))
+    # the enumeration must actually exercise more than the final state
+    assert len(reached) > 1
+
+
+def test_crash_images_requires_capture(tmp_path):
+    san = PMemSanitizer()  # capture defaults off
+    with pytest.raises(RuntimeError):
+        list(san.crash_images("x"))
+
+
+# ---- satellites: pmem.py surfacing -----------------------------------
+
+def test_region_dirty_property_and_close_flush(tmp_path, _pmem_sanitize):
+    pool = _mk_pool(tmp_path)
+    region = pool.create("d/x", 64)
+    assert region.dirty  # fresh create: bytes not yet flushed
+    region.flush()
+    assert not region.dirty
+    region.write(0, np.full(8, 3, dtype=np.uint8))
+    assert region.dirty
+    region.close()  # flushes because dirty
+    # a fresh pool (new process analogue) must see the flushed bytes
+    reopened = _mk_pool(tmp_path).open("d/x")
+    assert not reopened.dirty
+    assert bytes(reopened.read(0, 8)) == bytes([3] * 8)
+    _absolve(_pmem_sanitize)  # the dirty close above was the point
+
+
+def test_dir_fsync_failure_counted_and_warned_once(tmp_path, monkeypatch):
+    import os as _os
+    pool = _mk_pool(tmp_path)
+    real_fsync = _os.fsync
+
+    def deny_dir_fsync(fd):
+        # file fsyncs (writable fd) succeed; directory fsyncs refuse —
+        # the EINVAL some filesystems return for O_RDONLY dir handles
+        import stat
+        if stat.S_ISDIR(_os.fstat(fd).st_mode):
+            raise OSError("fsync on directory refused")
+        return real_fsync(fd)
+
+    monkeypatch.setattr(_os, "fsync", deny_dir_fsync)
+    with pytest.warns(RuntimeWarning, match="dir_fsync_failures"):
+        pool.put_json("m/a.json", {"v": 1})
+    pool.put_json("m/b.json", {"v": 2})  # counted, but no second warning
+    assert pool.dir_fsync_failures == 2
+    assert pool.get_json("m/a.json") == {"v": 1}
+    assert pool.get_json("m/b.json") == {"v": 2}

@@ -227,8 +227,10 @@ def test_pmem_rename_atomic_swap_evicts_handles(cluster):
     import numpy as np
     a = pool.create("swap/a.bin", 4096)
     a.write(0, np.full(8, 1, dtype=np.uint8))
+    a.flush()
     b = pool.create("swap/b.bin", 4096)
     b.write(0, np.full(8, 2, dtype=np.uint8))
+    b.flush()  # rename is a commit point: flush before it (sanitizer)
     pool.rename("swap/b.bin", "swap/a.bin")
     assert not pool.exists("swap/b.bin")
     # a reopened handle sees the NEW bytes, not a stale cached mmap
