@@ -6,7 +6,7 @@ PY ?= python
 SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast bench lint hygiene repair-smoke daemon-smoke metalog-smoke analyze sanitize-smoke
+.PHONY: verify test-fast bench lint hygiene repair-smoke daemon-smoke metalog-smoke analyze sanitize-smoke obs-smoke
 
 # `time` prefix: suite duration is surfaced wherever verify runs,
 # including the GitHub Actions log (CI calls these targets).
@@ -64,3 +64,7 @@ analyze:
 sanitize-smoke:
 	$(PY) -m pytest -x -q tests/test_meta_log.py tests/test_checkpoint.py \
 		tests/test_analysis.py --pmem-sanitize
+
+obs-smoke:
+	$(PY) -m pytest -x -q tests/test_obs.py --pmem-sanitize
+	$(PY) benchmarks/bench_obs.py --smoke

@@ -14,13 +14,17 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--roofline", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--emit-metrics", action="store_true",
+                    help="dump the obs suite's final telemetry snapshot "
+                         "to BENCH_obs.json")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_checkpoint, bench_io_scaling,
-                            bench_kernels, bench_meta_log, bench_repair,
-                            bench_repair_daemon, bench_replication,
-                            bench_staging, bench_tiered_io,
-                            bench_tiering, bench_workflow)
+                            bench_kernels, bench_meta_log, bench_obs,
+                            bench_repair, bench_repair_daemon,
+                            bench_replication, bench_staging,
+                            bench_tiered_io, bench_tiering,
+                            bench_workflow)
     suites = {
         "io_scaling": bench_io_scaling.run,       # paper Table I
         "checkpoint": bench_checkpoint.run,       # async/delta claims (§V.8)
@@ -32,6 +36,7 @@ def main(argv=None) -> None:
         "repair": bench_repair.run,               # replication-factor repair
         "repair_daemon": bench_repair_daemon.run,  # single-copy window
         "meta_log": bench_meta_log.run,           # append vs JSON rewrite
+        "obs": bench_obs.run,                     # telemetry-plane overhead
         "kernels": bench_kernels.run,
     }
     print("name,us_per_call,derived")
@@ -46,6 +51,12 @@ def main(argv=None) -> None:
             failed = True
             print(f"{name},ERROR,{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    if args.emit_metrics and bench_obs.LAST_SNAPSHOT is not None:
+        import json
+        with open("BENCH_obs.json", "w") as f:
+            json.dump(bench_obs.LAST_SNAPSHOT, f, indent=2,
+                      sort_keys=True, default=str)
+        print("wrote BENCH_obs.json", file=sys.stderr)
     if args.roofline:
         from benchmarks import roofline
         roofline.main()

@@ -41,6 +41,11 @@ import numpy as np
 from repro.core import pmem as _pmem
 
 _MLOG_MAGIC = b"MLOG1\x00"
+# the obs flight recorder (repro.obs.recorder) stores its committed
+# tail at the same header slot under the same discipline — the tail
+# check below covers both log formats
+_OBS_MAGIC = b"OBSR1\x00"
+_TAILED_MAGICS = (_MLOG_MAGIC, _OBS_MAGIC)
 _TAIL_OFF = 8
 _HDR_SIZE = 64
 
@@ -247,7 +252,7 @@ class PMemSanitizer:
     @staticmethod
     def _is_mlog(region) -> bool:
         try:
-            return bytes(region._mm[:len(_MLOG_MAGIC)]) == _MLOG_MAGIC
+            return bytes(region._mm[:len(_MLOG_MAGIC)]) in _TAILED_MAGICS
         except Exception:
             return False
 

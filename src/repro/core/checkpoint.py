@@ -105,8 +105,10 @@ class DistributedCheckpointer:
     def __init__(self, stores: Dict[str, PMemObjectStore],
                  scheduler: Optional[DataScheduler] = None,
                  external: Optional[ExternalStore] = None,
-                 buddy: bool = True, delta: bool = False, slots: int = 2):
+                 buddy: bool = True, delta: bool = False, slots: int = 2,
+                 obs=None):
         self.stores = stores
+        self.obs = obs
         self.nodes = sorted(stores)
         self.scheduler = scheduler
         self.external = external
@@ -135,7 +137,15 @@ class DistributedCheckpointer:
         # protects the active delta base from cache trimming
         self._slot_cache: Dict[int, int] = {}
         self._slot_pin: Optional[int] = None
-        self.last_restore_stats: Dict[str, int] = {}
+        # restore-scan counters live in the telemetry registry (reset
+        # per restore_latest_recoverable call); ``last_restore_stats``
+        # keeps the old dict-shaped read surface as an alias view
+        from repro.obs.metrics import Registry, StatsView
+        reg = obs.registry if obs is not None else Registry()
+        self._restore_counters = {
+            "skipped_by_ack": reg.counter("restore.skipped_by_ack"),
+            "probed": reg.counter("restore.probed")}
+        self.last_restore_stats = StatsView(self._restore_counters)
 
     # ------------------------------------------------------------------
     def _meta_store(self) -> PMemObjectStore:
@@ -242,7 +252,8 @@ class DistributedCheckpointer:
     # ------------------------------------------------------------------
     def save(self, step: int, tree, *, base_step: Optional[int] = None,
              drain: bool = False,
-             post_commit: Optional[List] = None) -> dict:
+             post_commit: Optional[List] = None,
+             trace: Optional[dict] = None) -> dict:
         """Write one checkpoint. ``base_step`` enables delta encoding
         against that step's full checkpoint. Returns the global manifest.
 
@@ -270,6 +281,13 @@ class DistributedCheckpointer:
         manifest: Dict[str, Any] = {
             "step": step, "slot": slot, "ts": time.time(),
             "delta_base": base_step, "leaves": {}, "nodes": ring}
+        if trace:
+            # correlation context minted at the save_async boundary:
+            # stamped into the durable manifest and carried by the
+            # replication channel into every per-node ack record, so a
+            # post-crash ring replay reconnects this checkpoint's
+            # replicate -> drain -> ack lifecycle as one trace
+            manifest["trace"] = trace
         per_node: Dict[str, Dict[str, np.ndarray]] = {
             nid: {} for nid in ring}
         for path, arr in leaves.items():
@@ -349,7 +367,7 @@ class DistributedCheckpointer:
         if self._ack_log is None:
             self._ack_log = MetaLog(self.stores, self.nodes,
                                     "ckpt/ackslog",
-                                    fold=_fold_ckpt_acks)
+                                    fold=_fold_ckpt_acks, obs=self.obs)
         return self._ack_log
 
     def record_ack(self, step: int, nid: str, kind: str,
@@ -560,14 +578,17 @@ class DistributedCheckpointer:
         (benchmarks/bench_replication.py measures the gap vs probe-all).
         """
         last_err: Optional[Exception] = None
-        stats = {"skipped_by_ack": 0, "probed": 0}
-        self.last_restore_stats = stats
+        # per-call scan counters: registry instruments reset at entry;
+        # ``last_restore_stats`` is the permanent read-through view
+        stats = self._restore_counters
+        for c in stats.values():
+            c.set(0)
         for step in reversed(self.available_steps()):
             if use_acks and lost_nodes and \
                     not self._acks_plausible(step, lost_nodes):
-                stats["skipped_by_ack"] += 1
+                stats["skipped_by_ack"].inc()
                 continue
-            stats["probed"] += 1
+            stats["probed"].inc()
             try:
                 return self.restore(step, lost_nodes=lost_nodes)
             except (IOError, FileNotFoundError, KeyError) as e:

@@ -19,6 +19,7 @@ from repro.core.resilience import FailureRecovery, Heartbeat
 from repro.core.tiered_io import TieredIO
 from repro.core.tiering import DLMCache
 from repro.core.workflow import WorkflowScheduler
+from repro.obs.plane import TelemetryPlane
 
 
 class SimCluster:
@@ -26,27 +27,35 @@ class SimCluster:
                  pmem_capacity: int = 1 << 32,
                  external_bandwidth: Optional[float] = None,
                  buddy: bool = True, delta: bool = False,
-                 dlm_capacity: int = 1 << 28, slots: int = 2):
+                 dlm_capacity: int = 1 << 28, slots: int = 2,
+                 telemetry: bool = True):
         self.root = Path(root)
         self.node_ids = [f"node{i}" for i in range(n_nodes)]
         self.pools: Dict[str, PMemPool] = {
             nid: PMemPool(self.root / "pmem", nid,
                           capacity_bytes=pmem_capacity)
             for nid in self.node_ids}
+        # telemetry plane: one metrics registry + one crash-persistent
+        # flight-recorder ring per node pool. telemetry=False keeps the
+        # registry (cheap DRAM counters) but records no pmem events —
+        # the baseline leg of the overhead bench.
+        self.obs = TelemetryPlane(self.pools, enabled=telemetry)
         self.stores: Dict[str, PMemObjectStore] = {
             nid: PMemObjectStore(pool) for nid, pool in self.pools.items()}
         self.external = ExternalStore(self.root / "external",
                                       bandwidth_bytes_s=external_bandwidth)
-        self.scheduler = DataScheduler(self.stores, self.external)
+        self.scheduler = DataScheduler(self.stores, self.external,
+                                       obs=self.obs)
         self.view = DistributedStore(self.stores)
         self.checkpointer = DistributedCheckpointer(
             self.stores, self.scheduler, self.external, buddy=buddy,
-            delta=delta, slots=slots)
+            delta=delta, slots=slots, obs=self.obs)
         self.heartbeat = Heartbeat(self.stores)
         # the unified async I/O engine (checkpoint + KV tiering + staging)
         self.dlm = DLMCache(self.stores[self.node_ids[0]],
-                            capacity_bytes=dlm_capacity)
-        self.tiered = TieredIO(self.checkpointer, self.scheduler, self.dlm)
+                            capacity_bytes=dlm_capacity, obs=self.obs)
+        self.tiered = TieredIO(self.checkpointer, self.scheduler, self.dlm,
+                               obs=self.obs)
         self.recovery = FailureRecovery(self.checkpointer, self.heartbeat,
                                         tiered=self.tiered)
         # the persistent dataset exchange: catalog replication rides the
@@ -56,7 +65,8 @@ class SimCluster:
         self.workflows = WorkflowScheduler(self.stores, self.scheduler,
                                            self.external,
                                            tiered=self.tiered,
-                                           catalog=self.catalog)
+                                           catalog=self.catalog,
+                                           obs=self.obs)
 
     def start_repair_daemon(self, **kw):
         """Start the continuous background repair daemon (owned by the
@@ -102,3 +112,7 @@ class SimCluster:
         self.recovery.stop_daemon()
         self.tiered.shutdown()
         self.scheduler.shutdown()
+        # clean shutdown: drop a metrics snapshot on every live pool.
+        # After a crash this never runs — the flight-recorder rings are
+        # then the diagnosis (python -m repro.obs.report).
+        self.obs.persist_snapshot()

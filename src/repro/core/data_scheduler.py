@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.analysis.annotations import rehydration_entry
 from repro.core.object_store import PMemObjectStore
+from repro.obs.metrics import Registry, StatsView
 
 
 class ExternalStore:
@@ -93,13 +94,28 @@ class DataScheduler:
     """Async movement daemons over {node_id -> PMemObjectStore}."""
 
     def __init__(self, stores: Dict[str, PMemObjectStore],
-                 external: ExternalStore, workers_per_node: int = 1):
+                 external: ExternalStore, workers_per_node: int = 1,
+                 obs=None):
         self.stores = stores
         self.external = external
+        self.obs = obs
         self.queues: Dict[str, "queue.PriorityQueue[_Task]"] = {
             nid: queue.PriorityQueue() for nid in stores}
-        self.stats = {nid: {"staged_in": 0, "drained": 0, "replicated": 0}
+        # per-channel byte counters live in the telemetry registry;
+        # ``stats`` keeps the legacy dict shape as a read-through view.
+        # Workers update the internally-locked counters directly, which
+        # retires the old unguarded ``self.stats[nid][...] += n`` writes
+        reg = obs.registry if obs is not None else Registry()
+        self._counters = {
+            nid: {k: reg.counter(f"sched.{k}_bytes.{nid}")
+                  for k in ("staged_in", "drained", "replicated")}
+            for nid in stores}
+        self.stats = {nid: StatsView(self._counters[nid])
                       for nid in stores}
+        self._depth = {nid: reg.gauge(f"sched.queue_depth.{nid}")
+                       for nid in stores}
+        self._qwait = reg.histogram("sched.queue_wait_s")
+        self._task_s = reg.histogram("sched.task_s")
         self._seq = 0
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
@@ -137,12 +153,42 @@ class DataScheduler:
                 return None
         return None
 
-    def _submit(self, nid: str, fn: Callable, priority: int) -> Future:
+    def _submit(self, nid: str, fn: Callable, priority: int,
+                label: str = "task",
+                span: Optional[dict] = None) -> Future:
         fut: Future = Future()
         with self._lock:
             self._seq += 1
             seq = self._seq
-        self.queues[nid].put(_Task(priority, seq, fn, fut))
+        obs = self.obs
+        t_enq = time.time()
+
+        def run():
+            # queue-depth/wait instruments + (when a caller threaded a
+            # trace context through ``span=``) a child span bracketing
+            # the task body on the executing node's flight ring
+            self._qwait.observe(time.time() - t_enq)
+            self._depth[nid].dec()
+            sp = None
+            if obs is not None and span is not None:
+                sp = obs.begin(f"sched.{label}", node=nid,
+                               trace=span.get("trace"),
+                               parent=span.get("span", 0))
+            t0 = time.time()
+            try:
+                out = fn()
+            except Exception:
+                self._task_s.observe(time.time() - t0)
+                if sp is not None:
+                    obs.end(sp, status="error")
+                raise
+            self._task_s.observe(time.time() - t0)
+            if sp is not None:
+                obs.end(sp)
+            return out
+
+        self._depth[nid].inc()
+        self.queues[nid].put(_Task(priority, seq, run, fut))
         return fut
 
     # ---- public channels ----
@@ -150,8 +196,8 @@ class DataScheduler:
     def stage_in(self, nid: str, external_name: str, obj_name: str,
                  version: int = 0, priority: int = 0,
                  meta: Optional[dict] = None,
-                 on_complete: Optional[Callable[[Any], None]] = None
-                 ) -> Future:
+                 on_complete: Optional[Callable[[Any], None]] = None,
+                 span: Optional[dict] = None) -> Future:
         """External -> pmem pre-load. ``meta`` stamps the staged object
         (drain-tier rehydration stages a checkpoint shard back and must
         carry its step tag so restore's slot-reuse check still holds);
@@ -160,19 +206,20 @@ class DataScheduler:
         def go():
             tree = self.external.get(external_name)
             man = self.stores[nid].put(obj_name, tree, version, meta=meta)
-            self.stats[nid]["staged_in"] += man["nbytes"]
+            self._counters[nid]["staged_in"].inc(man["nbytes"])
             if on_complete is not None:
                 on_complete(man)
             return man
-        return self._submit(nid, go, priority)
+        return self._submit(nid, go, priority, label="stage_in",
+                            span=span)
 
     @rehydration_entry
     def drain(self, nid: str, obj_name: str, external_name: str,
               version: int = 0, priority: int = 1,
               delete_after: bool = False,
               expect_meta: Optional[dict] = None,
-              on_complete: Optional[Callable[[Any], None]] = None
-              ) -> Future:
+              on_complete: Optional[Callable[[Any], None]] = None,
+              span: Optional[dict] = None) -> Future:
         def go():
             # one manifest snapshot + CRC so a concurrent overwrite of
             # the source (checkpoint slot reuse) raises instead of
@@ -189,7 +236,7 @@ class DataScheduler:
                     f"ran ({e})") from e
             _check_expect_meta(man, expect_meta, "drain", obj_name)
             self.external.put(external_name, tree)
-            self.stats[nid]["drained"] += man["nbytes"]
+            self._counters[nid]["drained"].inc(man["nbytes"])
             if delete_after:
                 self.stores[nid].delete(obj_name, version)
             # ack hook: runs INSIDE the task, after the external copy is
@@ -199,15 +246,16 @@ class DataScheduler:
             if on_complete is not None:
                 on_complete(external_name)
             return external_name
-        return self._submit(nid, go, priority)
+        return self._submit(nid, go, priority, label="drain",
+                            span=span)
 
     @rehydration_entry
     def replicate(self, src: str, obj_name: str, dst: str,
                   version: int = 0, priority: int = 2,
                   dst_name: Optional[str] = None,
                   expect_meta: Optional[dict] = None,
-                  on_complete: Optional[Callable[[Any], None]] = None
-                  ) -> Future:
+                  on_complete: Optional[Callable[[Any], None]] = None,
+                  span: Optional[dict] = None) -> Future:
         """Copy an object to another node's pmem under ``dst_name``
         (defaults to replica/<src>/<obj> so it never shadows the
         destination's own objects). ``expect_meta`` pins the object
@@ -241,21 +289,24 @@ class DataScheduler:
                 name, tree, version,
                 meta={**src_meta,
                       "replica_of": src_meta.get("replica_of", src)})
-            self.stats[src]["replicated"] += man["nbytes"]
+            self._counters[src]["replicated"].inc(man["nbytes"])
             # ack hook after the replica is durable on ``dst`` — a
             # failure here fails the task, never records a false ack
             if on_complete is not None:
                 on_complete(man)
             return man
-        return self._submit(src, go, priority)
+        return self._submit(src, go, priority, label="replicate",
+                            span=span)
 
-    def run_job(self, nid: str, fn: Callable, priority: int = 3) -> Future:
+    def run_job(self, nid: str, fn: Callable, priority: int = 3,
+                span: Optional[dict] = None) -> Future:
         """Compute channel: run a workflow job body on node ``nid``'s
         worker. Jobs ride the same priority queues as data movement
         (movement outranks them) and the same work stealing, so ready
         jobs placed on different nodes genuinely run concurrently while
         an overloaded node's backlog can drain elsewhere."""
-        return self._submit(nid, fn, priority)
+        return self._submit(nid, fn, priority, label="run_job",
+                            span=span)
 
     def queue_depth(self, nid: str) -> int:
         return self.queues[nid].qsize()

@@ -101,8 +101,9 @@ class MetaLog:
                  fold: Callable[[dict, dict], None],
                  base: Optional[Callable[[], dict]] = None,
                  compact_entries: int = 2048,
-                 compact_bytes: int = 1 << 20):
+                 compact_bytes: int = 1 << 20, obs=None):
         self.stores = stores
+        self._obs = obs
         self.nodes = sorted(nodes)
         self.name = name
         self._fold = fold
@@ -120,6 +121,13 @@ class MetaLog:
         self._synced: set = set()
         self.stats = {"appends": 0, "compactions": 0, "reseeds": 0,
                       "replay_bytes": 0, "snapshot_bytes": 0}
+        # append/replay/compaction wall-clock histograms (shared across
+        # every MetaLog on the same plane: acks, catalog, journals)
+        from repro.obs.metrics import Registry
+        reg = obs.registry if obs is not None else Registry()
+        self._t_append = reg.histogram("metalog.append_s")
+        self._t_replay = reg.histogram("metalog.replay_s")
+        self._t_compact = reg.histogram("metalog.compact_s")
 
     # ---- plumbing -----------------------------------------------------
     def _pool(self, nid: str):
@@ -261,6 +269,7 @@ class MetaLog:
         then the seq-union of newer events in order. Copies are scanned
         longest-first so shorter replicas' identical snapshots are
         skipped by header alone."""
+        t0 = time.time()
         self.stats["replay_bytes"] = 0
         best_snap: Optional[dict] = None
         events: Dict[int, dict] = {}
@@ -327,6 +336,7 @@ class MetaLog:
                     break
             if covered == applied:
                 self._synced.add(nid)
+        self._t_replay.observe(time.time() - t0)
 
     def _ensure_open(self) -> None:
         if self._state is None:
@@ -378,6 +388,7 @@ class MetaLog:
         """Durably append one event to every live pool copy and fold it
         into the head state. Returns the entry's seq. Raises IOError
         when no pool accepted the entry (nothing was persisted)."""
+        t0 = time.time()
         with self._lock:
             self._ensure_open()
             self._sync_foreign()
@@ -412,6 +423,7 @@ class MetaLog:
             if self._entries_since_snap >= self.compact_entries or \
                     self._tail_bytes() >= self.compact_bytes:
                 self.compact()
+            self._t_append.observe(time.time() - t0)
             return seq
 
     def _tail_bytes(self) -> int:
@@ -428,6 +440,7 @@ class MetaLog:
 
         ``_crash_after_snapshot`` stops between the phases (tests only:
         simulates the worst-case crash window)."""
+        t0 = time.time()
         with self._lock:
             self._ensure_open()
             blob = self._snapshot_blob()
@@ -458,6 +471,7 @@ class MetaLog:
                 self._synced.add(nid)
             self._entries_since_snap = 0
             self.stats["compactions"] += 1
+            self._t_compact.observe(time.time() - t0)
 
     def replay(self) -> dict:
         """A FRESH deterministic replay from the pool copies (ignoring
@@ -465,7 +479,7 @@ class MetaLog:
         replayed state; ``stats['replay_bytes']`` records the bytes
         read (the bench asserts compaction keeps this bounded)."""
         other = MetaLog(self.stores, self.nodes, self.name,
-                        fold=self._fold, base=self._base)
+                        fold=self._fold, base=self._base, obs=self._obs)
         replayed = other.state()
         with self._lock:
             # stats writes elsewhere hold the append lock; a replay

@@ -164,6 +164,40 @@ sits on a single pmem copy. ``RepairDaemon`` closes it:
     daemon's already-completed sweeps instead of re-scanning from
     scratch; the daemon never quiesces foreground work, which is safe
     because acks only ever describe already-durable transfers.
+
+Telemetry plane — metrics, spans, and the crash-persistent recorder
+-------------------------------------------------------------------
+Every channel reports into an optional ``TelemetryPlane``
+(``repro.obs``), threaded through the ``obs=`` constructor kwarg of
+every component (``SimCluster`` wires one automatically; ``obs=None``
+degrades every hook to a no-op or a DRAM-only counter update):
+
+  * **Metrics**: channel counters (``tiered.saves`` etc. — the legacy
+    ``TieredIO.stats`` dict survives as a registry-backed ``StatsView``
+    alias), queue-depth gauges, and bounded histograms for the
+    latencies the paper's analysis needs: ``ckpt.save_commit_s`` (the
+    node-local commit the trainer blocks on) and
+    ``ckpt.submit_to_ack_s`` (submit -> durable ack, per transfer —
+    the replication/drain QoS signal).
+  * **Trace spans**: ``save_async`` mints one trace id per checkpoint;
+    it rides the manifest into the replication channel (per-node
+    ``ckpt.replicate``/``ckpt.drain`` child spans), the scheduler's
+    task meta (``sched.*`` spans with queue-wait), and the persisted
+    ack records (``"trace"`` key) — so one save's
+    commit -> replicate -> drain -> ack fan-out reconstructs as a
+    single causally-ordered tree, post-hoc, from durable state alone.
+    Repair sweeps (``repair.sweep``) and workflow DAGs (``wf.job``)
+    mint their own traces the same way. Trace keys are NEVER added to
+    ``expect_meta`` (which is equality-compared at the destination).
+  * **Flight recorder**: span/point events append to a fixed-size
+    per-node pmem ring (``obs/flightring``) under the same
+    committed-tail discipline as ``MetaLog`` — slot bytes -> flush ->
+    tail -> flush — so a torn final event is invisible to replay and
+    everything behind the committed tail survives a crash.
+    ``python -m repro.obs.report <pmem-root>`` replays surviving rings
+    into the merged timeline; ``analysis/README.md`` documents the
+    recording contract and overhead bounds
+    (``benchmarks/bench_obs.py`` enforces <5% on the save path).
 """
 from __future__ import annotations
 
@@ -179,6 +213,8 @@ from repro.core.data_scheduler import DataScheduler, SupersededError
 from repro.core.dataset_exchange import ack_targets, read_json_copies
 from repro.core.meta_log import MetaLog
 from repro.core.tiering import DLMCache
+from repro.obs.metrics import Registry, StatsView
+from repro.obs.trace import ctx as _span_ctx
 
 
 #: acknowledged durability levels, weakest to strongest (module
@@ -288,9 +324,23 @@ class ReplicationChannel:
     """
 
     def __init__(self, checkpointer: DistributedCheckpointer,
-                 scheduler: DataScheduler):
+                 scheduler: DataScheduler, obs=None):
         self.checkpointer = checkpointer
         self.scheduler = scheduler
+        self.obs = obs
+        reg = obs.registry if obs is not None else Registry()
+        # submit -> durable-ack wall clock, per transfer (the QoS
+        # feedback signal ROADMAP item 5 needs)
+        self._ack_s = reg.histogram("ckpt.submit_to_ack_s")
+
+    def _begin(self, name: str, nid: str, tid: int, parent: int,
+               **attrs):
+        """Child span on ``nid``'s ring when the manifest carried a
+        trace context (None otherwise — spans are opt-in per save)."""
+        if self.obs is None or not tid:
+            return None
+        return self.obs.begin(name, node=nid, trace=tid, parent=parent,
+                              **attrs)
 
     @rehydration_entry
     def submit(self, manifest: dict, *, drain: bool = False,
@@ -299,22 +349,38 @@ class ReplicationChannel:
         step, slot = manifest["step"], manifest["slot"]
         ring = manifest.get("nodes") or ckpt.nodes
         obj = f"ckpt/slot{slot}"
+        # trace context minted at save_async and stamped into the
+        # manifest: every per-node transfer gets a child span, and the
+        # trace id rides the ack info into the durable ack log
+        trace = manifest.get("trace") or {}
+        tid, root = trace.get("trace", 0), trace.get("span", 0)
         futs: List[Future] = []
         if ckpt.buddy and len(ring) > 1:
             for nid in ring:
                 buddy = ckpt.buddy_of(nid, ring)
+                sp = self._begin("ckpt.replicate", nid, tid, root,
+                                 step=step, target=buddy)
+                info = {"target": buddy, "targets": [buddy]}
+                if tid:
+                    info["trace"] = tid
                 futs.append(self.scheduler.replicate(
                     nid, obj, buddy, expect_meta={"step": step},
-                    on_complete=self._ack(step, nid, "replica",
-                                          {"target": buddy,
-                                           "targets": [buddy]})))
+                    span=_span_ctx(sp),
+                    on_complete=self._ack(step, nid, "replica", info,
+                                          span=sp)))
         if drain and ckpt.external is not None:
             for nid in ring:
                 ext = f"ckpt_step{step}_{nid}"
+                sp = self._begin("ckpt.drain", nid, tid, root,
+                                 step=step, external=ext)
+                info = {"external": ext}
+                if tid:
+                    info["trace"] = tid
                 futs.append(self.scheduler.drain(
                     nid, obj, ext, expect_meta={"step": step},
-                    on_complete=self._ack(step, nid, "drain",
-                                          {"external": ext})))
+                    span=_span_ctx(sp),
+                    on_complete=self._ack(step, nid, "drain", info,
+                                          span=sp)))
         if sink is not None:
             sink.extend(futs)
         return futs
@@ -333,11 +399,21 @@ class ReplicationChannel:
                                         expect_meta=expect_meta,
                                         on_complete=on_complete)
 
-    def _ack(self, step: int, nid: str, kind: str, info: dict):
+    def _ack(self, step: int, nid: str, kind: str, info: dict,
+             span=None):
         ckpt = self.checkpointer
+        obs = self.obs
+        t_submit = time.time()
 
         def record(_result) -> None:
             ckpt.record_ack(step, nid, kind, info)
+            self._ack_s.observe(time.time() - t_submit)
+            if obs is not None and span is not None:
+                # the ack lands as a point event on the transfer's span,
+                # then the span closes: submit -> durable ack, one arc
+                obs.event(f"ckpt.ack.{kind}", node=nid,
+                          trace=span.trace, parent=span.span, step=step)
+                obs.end(span)
         return record
 
 
@@ -360,7 +436,8 @@ class ExchangeChannel:
     def submit(self, src: str, obj: str, dst: str, *, version: int = 0,
                dst_name: Optional[str] = None,
                expect_meta: Optional[dict] = None,
-               on_ack=None, priority: int = 2) -> Future:
+               on_ack=None, priority: int = 2,
+               span: Optional[dict] = None) -> Future:
         """``dst_name`` overrides the replica name — repair copies a
         surviving replica ``replica/<home>/<obj>`` from its HOLDER, so
         the destination name must keep the original home, not the
@@ -371,7 +448,7 @@ class ExchangeChannel:
                                        dst_name=dst_name,
                                        expect_meta=expect_meta,
                                        on_complete=on_ack,
-                                       priority=priority)
+                                       priority=priority, span=span)
         if self._track is not None:
             self._track(fut)
         return fut
@@ -409,12 +486,13 @@ class DLMAckRegistry:
     NAME = "dlm/acks.json"  # legacy pre-log record (read-only base)
     LOG = "dlm/ackslog"
 
-    def __init__(self, stores, nodes: Sequence[str]):
+    def __init__(self, stores, nodes: Sequence[str], obs=None):
         self.stores = stores
         self.nodes = sorted(nodes)
         self._lock = threading.Lock()
         self._log = MetaLog(stores, self.nodes, self.LOG,
-                            fold=_fold_dlm_acks, base=self._legacy_base)
+                            fold=_fold_dlm_acks, base=self._legacy_base,
+                            obs=obs)
 
     def _legacy_base(self) -> Dict[str, dict]:
         try:
@@ -588,16 +666,32 @@ class RepairChannel:
                   "rehydrated": 0, "healthy": 0, "superseded": 0,
                   "unrepairable": 0, "drain_only": 0, "skipped": 0,
                   "peak_inflight": 0, "repaired": [], "errors": []}
+        obs = self.tiered.obs
+        sweep_span = None
+        if obs is not None:
+            # one trace per sweep: scan + every copy/re-ack hangs off it
+            sweep_span = obs.begin("repair.sweep", lost=sorted(lost))
+        sctx = _span_ctx(sweep_span)
         live = self._live(lost)
         plans: collections.deque = collections.deque()
         if self.tiered.checkpointer is not None:
             self._scan_checkpoints(lost, live, report, plans,
-                                   priority=priority, rehydrate=rehydrate)
-        self._scan_dlm(lost, live, report, plans, priority=priority)
+                                   priority=priority, rehydrate=rehydrate,
+                                   span=sctx)
+        self._scan_dlm(lost, live, report, plans, priority=priority,
+                       span=sctx)
         if self.tiered.catalog is not None:
             self._scan_datasets(lost, live, report, plans,
-                                priority=priority)
+                                priority=priority, span=sctx)
         self._execute(plans, report, max_inflight)
+        if obs is not None:
+            for k in ("checkpoint", "dataset", "dlm", "rehydrated",
+                      "healthy", "superseded", "unrepairable",
+                      "drain_only", "skipped"):
+                obs.counter(f"repair.{k}").inc(report[k])
+            obs.counter("repair.errors").inc(len(report["errors"]))
+            obs.end(sweep_span, repaired=len(report["repaired"]),
+                    errors=len(report["errors"]))
         return report
 
     def _execute(self, plans: "collections.deque", report: dict,
@@ -639,10 +733,13 @@ class RepairChannel:
     def _scan_checkpoints(self, lost: Set[str], live: List[str],
                           report: dict, plans: "collections.deque", *,
                           priority: Optional[int],
-                          rehydrate: bool) -> None:
+                          rehydrate: bool,
+                          span: Optional[dict] = None) -> None:
         ckpt = self.tiered.checkpointer
         sched = self.tiered.scheduler
         prio = {} if priority is None else {"priority": priority}
+        if span is not None:
+            prio["span"] = span
         seen_slots: Set[int] = set()
         for step in sorted(ckpt.available_steps(), reverse=True):
             try:
@@ -690,9 +787,10 @@ class RepairChannel:
 
                 def ack(_man, step=step, nid=nid, new=new,
                         new_targets=new_targets) -> None:
-                    ckpt.record_ack(step, nid, "replica",
-                                    {"target": new,
-                                     "targets": new_targets})
+                    info = {"target": new, "targets": new_targets}
+                    if span is not None:
+                        info["trace"] = span["trace"]
+                    ckpt.record_ack(step, nid, "replica", info)
                 plans.append({"surface": "checkpoint",
                               "counter": "checkpoint",
                               "obj": f"step{step}/{nid}",
@@ -763,12 +861,15 @@ class RepairChannel:
     @metadata_only
     def _scan_dlm(self, lost: Set[str], live: List[str],
                   report: dict, plans: "collections.deque", *,
-                  priority: Optional[int]) -> None:
+                  priority: Optional[int],
+                  span: Optional[dict] = None) -> None:
         reg = self.tiered.dlm_acks
         if reg is None:
             return
         sched = self.tiered.scheduler
         prio = {} if priority is None else {"priority": priority}
+        if span is not None:
+            prio["span"] = span
         for name, rec in reg.objects().items():
             home = rec.get("home")
             targets = ack_targets(rec)
@@ -792,10 +893,13 @@ class RepairChannel:
     @metadata_only
     def _scan_datasets(self, lost: Set[str], live: List[str],
                        report: dict, plans: "collections.deque", *,
-                       priority: Optional[int]) -> None:
+                       priority: Optional[int],
+                       span: Optional[dict] = None) -> None:
         catalog = self.tiered.catalog
         sched = self.tiered.scheduler
         prio = {} if priority is None else {"priority": priority}
+        if span is not None:
+            prio["span"] = span
         for rec in catalog.records():
             if rec.get("reclaimed"):
                 continue
@@ -983,6 +1087,11 @@ class RepairDaemon:
                 if self._attempts.get(key, 0) >= self.max_retries:
                     self.handled |= dead
             self._cv.notify_all()
+        obs = self.tiered.obs
+        if obs is not None:
+            obs.counter("repair.daemon_sweeps").inc()
+            obs.event("repair.daemon_sweep", dead=sorted(dead),
+                      errors=len(sweep["errors"]))
         return sweep
 
     # ---- the ledger --------------------------------------------------
@@ -1018,15 +1127,19 @@ class TieredIO:
     def __init__(self, checkpointer: Optional[DistributedCheckpointer] = None,
                  scheduler: Optional[DataScheduler] = None,
                  cache: Optional[DLMCache] = None,
-                 max_inflight_saves: Optional[int] = None):
+                 max_inflight_saves: Optional[int] = None,
+                 obs=None):
         self.checkpointer = checkpointer
         self.scheduler = scheduler
         self.cache = cache
+        self.obs = obs
+        reg = obs.registry if obs is not None else Registry()
         # the replication channel owns ALL replicate/drain fan-out; the
         # checkpointer delegates to it at every save commit
         self.replication: Optional[ReplicationChannel] = None
         if checkpointer is not None and scheduler is not None:
-            self.replication = ReplicationChannel(checkpointer, scheduler)
+            self.replication = ReplicationChannel(checkpointer, scheduler,
+                                                  obs=obs)
             checkpointer.replication = self.replication
         # dataset-exchange fan-out (catalog attached via attach_catalog)
         self.exchange: Optional[ExchangeChannel] = None
@@ -1051,7 +1164,7 @@ class TieredIO:
         if checkpointer is not None:
             self._home_nid = checkpointer.nodes[0]
             self.dlm_acks = DLMAckRegistry(checkpointer.stores,
-                                           checkpointer.nodes)
+                                           checkpointer.nodes, obs=obs)
             if cache is not None:
                 for nid, st in checkpointer.stores.items():
                     if st is cache.store:
@@ -1068,9 +1181,15 @@ class TieredIO:
             checkpointer.slots if checkpointer is not None else 2)
         self.errors: List[Exception] = []       # post-commit failures
         self.save_errors: List[Exception] = []  # checkpoint COMMIT failures
-        self.stats = {"saves": 0, "offloads": 0, "prefetch_hits": 0,
-                      "prefetch_loads": 0, "stage_in_hits": 0,
-                      "stage_in_loads": 0}
+        # registry-backed channel counters; ``stats`` stays dict-shaped
+        # (StatsView) so existing callers/tests read it unchanged
+        self._counters = {k: reg.counter(f"tiered.{k}")
+                          for k in ("saves", "offloads", "prefetch_hits",
+                                    "prefetch_loads", "stage_in_hits",
+                                    "stage_in_loads")}
+        self.stats = StatsView(self._counters)
+        self._g_inflight = reg.gauge("tiered.inflight_saves")
+        self._t_commit = reg.histogram("ckpt.save_commit_s")
         self._tickets: "collections.deque[SaveTicket]" = collections.deque()
         self._retired: List[SaveTicket] = []  # committed, drains may run
         self._futures: List[Future] = []   # offload/prefetch futures
@@ -1122,6 +1241,7 @@ class TieredIO:
             while len(self._tickets) >= self.max_inflight:
                 retiring.append(self._tickets.popleft())
             self._tickets.append(ticket)
+            self._g_inflight.set(len(self._tickets))
         for old in retiring:  # wait OUTSIDE the lock: offload/prefetch
             try:              # submissions must not stall behind a write
                 old.result()
@@ -1130,11 +1250,30 @@ class TieredIO:
             with self._lock:
                 self._retired.append(old)
 
+        obs = self.obs
+        root = None
+        if obs is not None:
+            # root span of the whole checkpoint trace: commit + every
+            # per-node replicate/drain/ack hangs off this id
+            root = obs.begin("ckpt.save", node=self._home_nid,
+                             step=step, drain=drain)
+
         def _save():
-            man = ckpt.save(step, tree, base_step=base_step, drain=drain,
-                            post_commit=ticket.post_commit)
+            t0 = time.time()
+            try:
+                man = ckpt.save(step, tree, base_step=base_step,
+                                drain=drain,
+                                post_commit=ticket.post_commit,
+                                trace=_span_ctx(root))
+            except Exception:
+                if obs is not None:
+                    obs.end(root, status="error")
+                raise
+            self._t_commit.observe(time.time() - t0)
             ticket.slot = man["slot"]
-            self.stats["saves"] += 1
+            self._counters["saves"].inc()
+            if obs is not None:
+                obs.end(root, slot=man["slot"])
             return man
 
         # chain into the ticket's pre-existing future: the ticket is
@@ -1267,7 +1406,7 @@ class TieredIO:
                 assert self.checkpointer is not None
                 self.checkpointer._meta_store().put(f"dlm/{name}", tree)
                 self._queue_dlm_replica(name)
-            self.stats["offloads"] += 1
+            self._counters["offloads"].inc()
             return name
 
         fut = self._submit(_persist)
@@ -1325,6 +1464,9 @@ class TieredIO:
         names = list(names)
 
         def _warm():
+            obs = self.obs
+            sp = obs.begin("dlm.prefetch", node=self._home_nid,
+                           n=len(names)) if obs is not None else None
             hits = loads = missing = 0
             for n in names:
                 try:
@@ -1334,8 +1476,10 @@ class TieredIO:
                         loads += 1
                 except (IOError, FileNotFoundError, KeyError):
                     missing += 1
-            self.stats["prefetch_hits"] += hits
-            self.stats["prefetch_loads"] += loads
+            self._counters["prefetch_hits"].inc(hits)
+            self._counters["prefetch_loads"].inc(loads)
+            if obs is not None:
+                obs.end(sp, hits=hits, loads=loads, missing=missing)
             return {"hits": hits, "loads": loads, "missing": missing}
 
         fut = self._read.submit(_warm)
@@ -1364,6 +1508,9 @@ class TieredIO:
         refs = list(refs)
 
         def _warm():
+            obs = self.obs
+            sp = obs.begin("exch.prefetch", node=self._home_nid,
+                           n=len(refs)) if obs is not None else None
             hits = loads = missing = 0
             from repro.core.dataset_exchange import cache_key
             for name in refs:
@@ -1377,8 +1524,10 @@ class TieredIO:
                     loads += 1
                 except (KeyError, IOError, FileNotFoundError):
                     missing += 1
-            self.stats["prefetch_hits"] += hits
-            self.stats["prefetch_loads"] += loads
+            self._counters["prefetch_hits"].inc(hits)
+            self._counters["prefetch_loads"].inc(loads)
+            if obs is not None:
+                obs.end(sp, hits=hits, loads=loads, missing=missing)
             return {"hits": hits, "loads": loads, "missing": missing}
 
         fut = self._read.submit(_warm)
@@ -1408,17 +1557,23 @@ class TieredIO:
         """Pre-load external objects into node ``nid``'s pmem (Fig. 8
         steps 1-3). Objects already resident count as stage-in hits."""
         assert self.scheduler is not None, "no scheduler attached"
+        obs = self.obs
+        sp = obs.begin("stage.stage_in", node=nid,
+                       n=len(names)) if obs is not None else None
         futs: List[Future] = []
         for name in names:
             obj = prefix + name
             if self.scheduler.stores[nid].exists(obj):
-                self.stats["stage_in_hits"] += 1
+                self._counters["stage_in_hits"].inc()
                 done: Future = Future()
                 done.set_result(None)
                 futs.append(done)
                 continue
-            self.stats["stage_in_loads"] += 1
-            futs.append(self.scheduler.stage_in(nid, name, obj))
+            self._counters["stage_in_loads"].inc()
+            futs.append(self.scheduler.stage_in(nid, name, obj,
+                                                span=_span_ctx(sp)))
+        if obs is not None:
+            obs.end(sp, submitted=len(futs))
         with self._lock:
             self._prune_done_locked()
             self._futures.extend(futs)

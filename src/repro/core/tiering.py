@@ -124,7 +124,9 @@ class DLMCache:
 
     def __init__(self, store: PMemObjectStore, capacity_bytes: int,
                  fallback_reader: Optional[Callable[[str], Any]] = None,
-                 on_writeback: Optional[Callable[[str], None]] = None):
+                 on_writeback: Optional[Callable[[str], None]] = None,
+                 obs=None):
+        from repro.obs.metrics import Registry
         self.store = store
         self.capacity = capacity_bytes
         self.fallback_reader = fallback_reader
@@ -143,12 +145,39 @@ class DLMCache:
         self._last_used: Dict[str, float] = {}
         self._gen: Dict[str, int] = {}  # bumped on put/evict (TOCTOU)
         self._lock = threading.RLock()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.prefetches = 0
-        self.prefetch_hits = 0
-        self.bypasses = 0  # oversized objects served/persisted uncached
+        # registry-backed counters; the legacy int attributes survive as
+        # read-through properties so callers/tests keep reading ints
+        reg = obs.registry if obs is not None else Registry()
+        self._counters = {k: reg.counter(f"dlm.{k}")
+                          for k in ("hits", "misses", "evictions",
+                                    "prefetches", "prefetch_hits",
+                                    "bypasses")}
+        self._g_used = reg.gauge("dlm.used_bytes")
+
+    @property
+    def hits(self) -> int:
+        return self._counters["hits"].value
+
+    @property
+    def misses(self) -> int:
+        return self._counters["misses"].value
+
+    @property
+    def evictions(self) -> int:
+        return self._counters["evictions"].value
+
+    @property
+    def prefetches(self) -> int:
+        return self._counters["prefetches"].value
+
+    @property
+    def prefetch_hits(self) -> int:
+        return self._counters["prefetch_hits"].value
+
+    @property
+    def bypasses(self) -> int:
+        # oversized objects served/persisted uncached
+        return self._counters["bypasses"].value
 
     def _bytes(self, tree) -> int:
         return sum(np.asarray(a).nbytes for _, a in _flatten(tree))
@@ -165,9 +194,10 @@ class DLMCache:
             if self.on_writeback is not None:
                 self.on_writeback(name)
         self._used -= self._sizes.pop(name, 0)
+        self._g_used.set(self._used)
         self._last_used.pop(name, None)
         self._gen[name] = self._gen.get(name, 0) + 1
-        self.evictions += 1
+        self._counters["evictions"].inc()
 
     def _evict_until_fits(self, incoming: int) -> None:
         while self._cache and self._used + incoming > self.capacity:
@@ -179,6 +209,7 @@ class DLMCache:
         if name in self._cache:
             self._cache.pop(name)
             self._used -= self._sizes.pop(name, 0)
+            self._g_used.set(self._used)
             self._dirty.pop(name, None)
             self._last_used.pop(name, None)
 
@@ -189,6 +220,7 @@ class DLMCache:
         self._cache[name] = tree
         self._sizes[name] = nb
         self._used += nb
+        self._g_used.set(self._used)
         self._dirty[name] = dirty
         self._last_used[name] = time.time()
 
@@ -203,7 +235,7 @@ class DLMCache:
                 self.store.put(f"dlm/{name}", tree)
                 if self.on_writeback is not None:
                     self.on_writeback(name)
-                self.bypasses += 1
+                self._counters["bypasses"].inc()
                 return
             self._insert(name, tree, nb, dirty=True)
 
@@ -224,15 +256,15 @@ class DLMCache:
     def get(self, name: str):
         with self._lock:
             if name in self._cache:
-                self.hits += 1
+                self._counters["hits"].inc()
                 self._cache.move_to_end(name)
                 self._last_used[name] = time.time()
                 return self._cache[name]
-            self.misses += 1
+            self._counters["misses"].inc()
             tree = self._read_through(name)
             nb = self._bytes(tree)
             if nb > self.capacity:
-                self.bypasses += 1  # serve uncached
+                self._counters["bypasses"].inc()  # serve uncached
                 return tree
             self._insert(name, tree, nb, dirty=False)
             return tree
@@ -250,7 +282,7 @@ class DLMCache:
             nb = self._bytes(tree)
             self._gen[name] = self._gen.get(name, 0) + 1
             if nb > self.capacity:
-                self.bypasses += 1
+                self._counters["bypasses"].inc()
                 return
             self._insert(name, tree, nb, dirty=False)
 
@@ -259,11 +291,11 @@ class DLMCache:
         the miss path, e.g. the catalog's home/replica resolution)."""
         with self._lock:
             if name in self._cache:
-                self.hits += 1
+                self._counters["hits"].inc()
                 self._cache.move_to_end(name)
                 self._last_used[name] = time.time()
                 return self._cache[name]
-            self.misses += 1
+            self._counters["misses"].inc()
             return None
 
     def drop(self, name: str) -> None:
@@ -281,9 +313,9 @@ class DLMCache:
         The pmem read happens OUTSIDE the lock — a background warm must
         not stall concurrent demand gets on the serving hot path."""
         with self._lock:
-            self.prefetches += 1
+            self._counters["prefetches"].inc()
             if name in self._cache:
-                self.prefetch_hits += 1
+                self._counters["prefetch_hits"].inc()
                 self._cache.move_to_end(name)
                 self._last_used[name] = time.time()  # warm != cold
                 return True
@@ -296,7 +328,7 @@ class DLMCache:
                     self._gen.get(name, 0) == gen:
                 nb = self._bytes(tree)
                 if nb > self.capacity:
-                    self.bypasses += 1  # warmed bytes stay in pmem only
+                    self._counters["bypasses"].inc()  # warmed bytes stay in pmem only
                 else:
                     self._insert(name, tree, nb, dirty=False)
             return False

@@ -141,8 +141,10 @@ class WorkflowResult(dict):
 class WorkflowScheduler:
     def __init__(self, stores: Dict[str, PMemObjectStore],
                  scheduler: DataScheduler, external: ExternalStore,
-                 tiered=None, catalog: Optional[DatasetCatalog] = None):
+                 tiered=None, catalog: Optional[DatasetCatalog] = None,
+                 obs=None):
         self.stores = stores
+        self.obs = obs
         self.nodes = sorted(stores)
         self.dsched = scheduler
         self.external = external
@@ -163,6 +165,10 @@ class WorkflowScheduler:
     def _log(self, kind: str, detail: str) -> None:
         with self._ev_lock:
             self.events.append((time.time(), kind, detail))
+        if self.obs is not None:
+            # mirror the in-DRAM event feed onto the flight recorder so
+            # a post-crash replay sees the workflow lifecycle too
+            self.obs.event(f"wf.{kind}", detail=detail)
 
     # ---- journal (append-only MetaLog, replicated) -------------------
     @staticmethod
@@ -198,7 +204,8 @@ class WorkflowScheduler:
             if log is None:
                 log = MetaLog(self.stores, self.nodes,
                               f"wf/{wf}/journal.log", fold=_fold_journal,
-                              base=lambda: self._legacy_journal(wf))
+                              base=lambda: self._legacy_journal(wf),
+                              obs=self.obs)
                 self._jlogs[wf] = log
             return log
 
@@ -290,12 +297,23 @@ class WorkflowScheduler:
 
     # ---- job body (runs on a DataScheduler worker) -------------------
     def _make_task(self, job: JobSpec, nodes: List[str], wf: str,
-                   lineage: List[List]):
+                   lineage: List[List], trace: int = 0):
+        obs = self.obs
+
         def task():
+            sp = None
+            if obs is not None and trace:
+                sp = obs.begin("wf.job", node=nodes[0], trace=trace,
+                               job=job.name, workflow=wf)
             ctx = JobContext(job, nodes, self.stores, self.view,
                              workflow=wf, catalog=self.catalog,
                              external=self.external)
-            outputs = job.fn(ctx) or {}
+            try:
+                outputs = job.fn(ctx) or {}
+            except Exception:
+                if obs is not None:
+                    obs.end(sp, status="error")
+                raise
             versions: Dict[str, int] = {}
             # outputs spread across the job's nodes; every one becomes a
             # catalog dataset (versioned + lineage-stamped + replicated)
@@ -309,6 +327,8 @@ class WorkflowScheduler:
                 if name in job.retain:
                     self._log("retain", f"{wf}:{name}@v{rec['version']} "
                               f"on {rec['home']}")
+            if obs is not None:
+                obs.end(sp, outputs=len(outputs))
             return outputs, versions
         return task
 
@@ -333,6 +353,10 @@ class WorkflowScheduler:
         is namespaced and journaled independently."""
         wf = workflow if workflow is not None \
             else f"wf{next(self._wf_seq)}"
+        wf_trace = 0
+        if self.obs is not None:
+            from repro.obs.trace import new_id
+            wf_trace = new_id()  # one trace id spans the whole DAG
         with self._lock:
             self._workflows.add(wf)
         by_name = {j.name: j for j in jobs}
@@ -436,7 +460,8 @@ class WorkflowScheduler:
                             pass  # reclaimed between check and acquire:
                             # the job's read falls back like _stage_inputs
                 task = self._make_task(
-                    job, nodes, wf, self._lineage_refs(job, wf, leases))
+                    job, nodes, wf, self._lineage_refs(job, wf, leases),
+                    trace=wf_trace)
                 self._log("launch", f"{wf}:{job.name}")
                 inflight[name] = (self.dsched.run_job(nodes[0], task),
                                   job, nodes, leases)

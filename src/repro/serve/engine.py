@@ -79,6 +79,10 @@ class ServeEngine:
         host = jax.tree.map(np.asarray, self.cache)
         obj = {"cache": host, "pos": np.int32(self.pos)}
         self.cache = None  # DRAM freed
+        obs = self._obs()
+        if obs is not None:
+            obs.counter("serve.spills").inc()
+            obs.event("serve.spill", session=name, replicate=replicate)
         if self.tiered is not None:
             fut = self.tiered.offload(f"serve/{name}", obj,
                                       replicate=replicate)
@@ -89,7 +93,15 @@ class ServeEngine:
         self.store.put(f"serve/{name}", obj)
         return None
 
+    def _obs(self):
+        """The TieredIO engine's telemetry plane, when one is wired."""
+        return getattr(self.tiered, "obs", None) \
+            if self.tiered is not None else None
+
     def resume(self, name: str) -> None:
+        obs = self._obs()
+        sp = obs.begin("serve.resume", session=name) \
+            if obs is not None else None
         if self.tiered is not None:
             obj = self.tiered.fetch(f"serve/{name}")
         else:
@@ -97,6 +109,9 @@ class ServeEngine:
             obj = self.store.get(f"serve/{name}")
         self.cache = jax.tree.map(jnp.asarray, obj["cache"])
         self.pos = int(obj["pos"])
+        if obs is not None:
+            obs.counter("serve.resumes").inc()
+            obs.end(sp)
 
     def prefetch_sessions(self, names: List[str]):
         """Warm cold session state pmem -> DRAM ahead of resume (Fig. 8
@@ -107,7 +122,11 @@ class ServeEngine:
     def evict_cold_sessions(self, max_idle_s: float = 0.0) -> int:
         """Spill idle cached sessions back to pmem (DRAM pressure valve)."""
         assert self.tiered is not None, "eviction needs a TieredIO engine"
-        return self.tiered.evict_cold(max_idle_s)
+        n = self.tiered.evict_cold(max_idle_s)
+        obs = self._obs()
+        if obs is not None:
+            obs.counter("serve.evictions").inc(n)
+        return n
 
     def repair(self, lost_nodes) -> dict:
         """Restore the replication factor of spilled session/KV state

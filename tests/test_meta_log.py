@@ -329,6 +329,10 @@ def test_log_backed_record_replays_identically_in_fresh_catalog(cluster):
     lease = cat.acquire("ds", workflow="w", owner="me", ttl_s=60.0)
     cat.release(lease)
     cat.unretain("ds", "w")
+    # join publish's async replica fan-out: its ack lands in the record
+    # log off-thread, and a head read racing it would differ from the
+    # fresh replay below by exactly that ack
+    cluster.tiered.quiesce()
     head = cat.record("ds", "w")
     fresh = DatasetCatalog(cluster.stores).record("ds", "w")
     assert fresh == head
