@@ -48,4 +48,27 @@ def run():
     dt = time.perf_counter() - t0
     rows.append(("external_fs_ckpt", dt * 1e6, f"{nbytes / dt / 1e9:.2f}GB/s"))
     c.shutdown()
+    # node->node replicate: whole-tree materialization vs the raw
+    # byte-range path (same state, same pools) — the fabric-side
+    # counterpart of the Table I rows (bench_zero_copy has the full
+    # breakdown incl. the wire codec)
+    from repro.core.object_store import copy_object
+    from repro.core.pmem import scratch_root
+    root = scratch_root("bench_io_copy_")
+    c = SimCluster(root, n_nodes=2, buddy=False)
+    src, dst = (c.stores[n] for n in c.node_ids)
+    src.put("xfer", state)
+    t0 = time.perf_counter()
+    tree, man = src.get_with_manifest("xfer", verify=True)
+    dst.put("xfer", tree, meta=dict(man.get("meta", {})))
+    dt_tree = time.perf_counter() - t0
+    rows.append(("replicate_whole_tree", dt_tree * 1e6,
+                 f"{nbytes / dt_tree / 1e9:.2f}GB/s"))
+    dst.delete("xfer")
+    t0 = time.perf_counter()
+    copy_object(src, dst, "xfer")
+    dt_raw = time.perf_counter() - t0
+    rows.append(("replicate_raw_byte_range", dt_raw * 1e6,
+                 f"{nbytes / dt_raw / 1e9:.2f}GB/s"))
+    c.shutdown()
     return rows

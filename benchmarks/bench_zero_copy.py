@@ -1,0 +1,185 @@
+"""Zero-copy byte-range data plane vs tree materialization (ROADMAP 4).
+
+Four comparisons over one large (>=64 MB) pmem object:
+
+  * replicate: legacy whole-tree path (get_with_manifest -> put, the
+    pre-zero-copy scheduler body) vs the raw byte-range path
+    (``copy_object`` streaming the backing region chunk-by-chunk with
+    the source manifest committed verbatim);
+  * replicate with the delta-int8 wire codec at the source (encoded
+    bytes moved instead of raw — the fabric-bytes lever);
+  * drain: whole-tree pickle vs ``export_object`` wire payload
+    (serialized exactly once at the external boundary);
+  * partial restore: whole-object read vs ``get_leaf``/
+    ``read_leaf_slice`` byte ranges (the N->M warm-resize primitive).
+
+``--smoke`` enforces the acceptance bar: the raw path must beat the
+whole-tree baseline by >=2x replicate throughput at a >=64 MB object
+WITH an audit proving zero tree materializations (``_flatten``/
+``_unflatten`` never invoked) on the pmem->pmem copy path, and the
+codec/partial paths must round-trip bit-exactly.
+
+Module global ``LAST_SNAPSHOT`` holds the final telemetry snapshot
+(``tiered.bytes_raw`` / ``tiered.bytes_encoded`` / ``copy.chunk``);
+``benchmarks/run.py --emit-metrics`` dumps it to BENCH_zero_copy.json.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.core.object_store as osmod
+from repro.core.object_store import (PMemObjectStore, copy_object,
+                                     export_object, wire_tree)
+from repro.core.pmem import PMemPool, scratch_root
+from repro.obs.plane import TelemetryPlane
+
+STATE_MB = 64
+SMOKE_SPEEDUP = 2.0
+REPS = 3
+
+LAST_SNAPSHOT = None  # set by run(); run.py --emit-metrics dumps it
+
+
+def _state(mb: int):
+    """>=64 MB object: one dominant quantization-friendly float leaf
+    (so the codec leg actually encodes), plus small satellites."""
+    n = mb * (1 << 20) // 4
+    rows = 1 << 12
+    r = np.random.RandomState(0)
+    return {"emb": r.randint(-100, 100, (rows, n // rows))
+            .astype(np.float32),
+            "head": {"b": r.randn(256).astype(np.float32)},
+            "ids": np.arange(1024, dtype=np.int32)}
+
+
+def _legacy_copy(src: PMemObjectStore, dst: PMemObjectStore,
+                 name: str) -> None:
+    """The pre-zero-copy replicate body: materialize the full tree,
+    re-put (re-flatten + re-CRC every leaf) on the destination."""
+    tree, man = src.get_with_manifest(name, verify=True)
+    dst.put(name, tree, meta=dict(man.get("meta", {})))
+
+
+class _MaterializationAudit:
+    """Counts _flatten/_unflatten invocations inside a with-block."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def __enter__(self):
+        self._orig = (osmod._flatten, osmod._unflatten)
+
+        def flatten(*a, **k):
+            self.calls += 1
+            return self._orig[0](*a, **k)
+
+        def unflatten(*a, **k):
+            self.calls += 1
+            return self._orig[1](*a, **k)
+        osmod._flatten, osmod._unflatten = flatten, unflatten
+        return self
+
+    def __exit__(self, *exc):
+        osmod._flatten, osmod._unflatten = self._orig
+        return False
+
+
+def _bench(fn, reps=REPS) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(smoke: bool = False):
+    global LAST_SNAPSHOT
+    rows = []
+    obs = TelemetryPlane(enabled=True)
+    root = scratch_root("bench_zc_")
+    pools = {n: PMemPool(root, n, capacity_bytes=1 << 34)
+             for n in ("src", "dst")}
+    st = {n: PMemObjectStore(p) for n, p in pools.items()}
+    state = _state(STATE_MB)
+    nbytes = sum(a.nbytes for a in
+                 (state["emb"], state["head"]["b"], state["ids"]))
+    st["src"].put("obj", state, meta={"step": 1})
+
+    # -- replicate: whole-tree baseline vs raw byte-range path --------
+    dt_tree = _bench(lambda: _legacy_copy(st["src"], st["dst"], "obj"))
+    rows.append(("replicate_whole_tree", dt_tree * 1e6,
+                 f"{nbytes / dt_tree / 1e9:.2f}GB/s"))
+    audit = _MaterializationAudit()
+    with audit:
+        dt_raw = _bench(lambda: copy_object(
+            st["src"], st["dst"], "obj", expect_meta={"step": 1},
+            obs=obs))
+    rows.append(("replicate_raw_byte_range", dt_raw * 1e6,
+                 f"{nbytes / dt_raw / 1e9:.2f}GB/s"))
+    speedup = dt_tree / dt_raw
+    rows.append(("replicate_raw_speedup", dt_raw * 1e6,
+                 f"{speedup:.2f}x_tree_materializations_{audit.calls}"))
+    out = st["dst"].get("obj", verify=True)
+    assert np.array_equal(out["emb"], state["emb"])
+
+    # -- replicate with the wire codec at the source ------------------
+    st["dst"].delete("obj")
+    dt_codec = _bench(lambda: copy_object(
+        st["src"], st["dst"], "obj", expect_meta={"step": 1},
+        codec=True, obs=obs))
+    man = st["dst"].manifest("obj")
+    enc = man["meta"]["wire_codec"]["nbytes_encoded"]
+    rows.append(("replicate_codec_delta8", dt_codec * 1e6,
+                 f"{enc / nbytes:.2f}x_bytes_on_wire"))
+    dec = st["dst"].get("obj", verify=True)
+    codec_exact = np.array_equal(dec["emb"], state["emb"])
+    assert codec_exact
+
+    # -- drain: pickle-the-tree vs wire payload -----------------------
+    import pickle
+    tree = st["src"].get("obj")
+    dt_pkl = _bench(lambda: pickle.dumps(tree))
+    rows.append(("drain_pickle_tree", dt_pkl * 1e6,
+                 f"{nbytes / dt_pkl / 1e9:.2f}GB/s"))
+    dt_wire = _bench(lambda: export_object(
+        st["src"], "obj", expect_meta={"step": 1}, obs=obs))
+    rows.append(("drain_export_wire", dt_wire * 1e6,
+                 f"{nbytes / dt_wire / 1e9:.2f}GB/s"))
+    wire = export_object(st["src"], "obj", codec=True)
+    assert np.array_equal(wire_tree(wire)["emb"], state["emb"])
+
+    # -- partial restore: whole object vs byte-range leaf/slice -------
+    dt_whole = _bench(lambda: st["dst"].get("obj", verify=True))
+    rows.append(("restore_whole_object", dt_whole * 1e6, "baseline"))
+    dt_leaf = _bench(lambda: st["dst"].get_leaf("obj", "head/b"))
+    rows.append(("restore_one_leaf", dt_leaf * 1e6,
+                 f"{dt_whole / max(dt_leaf, 1e-9):.0f}x_less_read"))
+    dt_slice = _bench(
+        lambda: st["dst"].read_leaf_slice("obj", "emb", 128, 64))
+    sl = st["dst"].read_leaf_slice("obj", "emb", 128, 64)
+    assert np.array_equal(sl, state["emb"][128:192])
+    rows.append(("restore_row_slice_64", dt_slice * 1e6,
+                 f"{dt_whole / max(dt_slice, 1e-9):.0f}x_less_read"))
+
+    LAST_SNAPSHOT = obs.snapshot()
+    if smoke:
+        assert audit.calls == 0, \
+            f"raw copy path materialized a tree ({audit.calls} calls)"
+        assert speedup >= SMOKE_SPEEDUP, \
+            (f"raw byte-range replicate only {speedup:.2f}x over the "
+             f"whole-tree baseline (need >={SMOKE_SPEEDUP}x at "
+             f"{STATE_MB}MB)")
+        assert enc < nbytes, "codec moved more bytes than raw"
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    rows = run(smoke="--smoke" in sys.argv)
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    if "--smoke" in sys.argv:
+        print("bench_zero_copy smoke OK", file=sys.stderr)

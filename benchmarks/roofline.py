@@ -95,6 +95,29 @@ def pick_hillclimb_cells(rows: List[dict]) -> Dict[str, str]:
             "most_collective_bound": f"{coll['arch']}:{coll['shape']}"}
 
 
+def codec_breakeven_note(wire_bw: float = 50e9,
+                         peak_flops: float = 197e12,
+                         ops_per_elem: float = 8.0) -> str:
+    """Flops-vs-fabric-bytes break-even for the delta-int8 wire codec:
+    encoding an f32 leaf moves ~0.25x the bytes (1B quantized + ~1B/256
+    tile scales vs 4B raw), at ~``ops_per_elem`` integer ops per
+    element for delta+quantize+CRC. The codec pays off on a channel
+    whose effective bandwidth is below ``breakeven_bw`` — true for
+    every cross-node replicate/drain hop here, false for node-local
+    pmem copies (which is why ``wire_codec`` is per-channel opt-in,
+    not global)."""
+    saved_per_elem = 3.0  # bytes an f32 element sheds on the wire
+    encode_s_per_elem = ops_per_elem / peak_flops
+    breakeven_bw = saved_per_elem / encode_s_per_elem
+    return (f"delta-int8 wire codec: ~0.25x bytes on the wire for f32 "
+            f"state; encode cost ~{ops_per_elem:.0f} ops/elem -> "
+            f"break-even at {breakeven_bw / 1e12:.0f} TB/s link "
+            f"bandwidth, i.e. ALWAYS compute-cheap vs the "
+            f"{wire_bw / 1e9:.0f} GB/s fabric; the real ceiling is the "
+            f"strict-lossless fallback rate (leaves that fail exact "
+            f"re-quantization ship raw — see bench_zero_copy).")
+
+
 def main():
     rows = load()
     print("## Dry-run table\n")
@@ -103,6 +126,8 @@ def main():
     print(roofline_table(rows))
     print("\n## Hillclimb candidates\n")
     print(json.dumps(pick_hillclimb_cells(rows), indent=1))
+    print("\n## Wire-codec break-even\n")
+    print(codec_breakeven_note())
 
 
 if __name__ == "__main__":

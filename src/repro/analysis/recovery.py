@@ -33,7 +33,7 @@ from typing import Dict, List, Optional, Set, Tuple
 from repro.analysis.core import (Finding, FuncInfo, Module, call_name, src,
                                  walk_in_order)
 
-ALWAYS_READ = {"get_with_manifest", "read_leaf_slice"}
+ALWAYS_READ = {"get_with_manifest", "read_leaf_slice", "get_leaf"}
 STOREISH = ("store", "external", "view")
 
 

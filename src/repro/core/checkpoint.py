@@ -33,7 +33,8 @@ from repro.core.data_scheduler import (DataScheduler, ExternalStore,
                                        SupersededError)
 from repro.core.dataset_exchange import ack_targets
 from repro.core.meta_log import MetaLog
-from repro.core.object_store import (PMemObjectStore, _flatten, _unflatten)
+from repro.core.object_store import (PMemObjectStore, _flatten, _unflatten,
+                                     is_wire_object, wire_leaves)
 from repro.kernels.ckpt_codec.ref import decode_ref, encode_ref
 
 TILE = 1024
@@ -460,13 +461,18 @@ class DistributedCheckpointer:
             out[path + ".__ds"] = scale
         return out
 
-    def _drained_payload(self, nid: str, step: int):
-        """The external drained copy of ``nid``'s shard at ``step`` —
-        the last-resort recovery tier, consulted ONLY when the recorded
-        drain ack says it exists (no blind external probes). Returns
-        None when there is no usable ack/external copy. The external
-        name carries the step, so identity is pinned by construction
-        (the drain task's expect_meta verified it at drain time)."""
+    def _drained_leaves(self, nid: str,
+                        step: int) -> Optional[Dict[str, np.ndarray]]:
+        """The external drained copy of ``nid``'s shard at ``step`` as
+        flat ``{path: array}`` leaves — the last-resort recovery tier,
+        consulted ONLY when the recorded drain ack says it exists (no
+        blind external probes). Returns None when there is no usable
+        ack/external copy. The external name carries the step, so
+        identity is pinned by construction (the drain task's expect_meta
+        verified it at drain time). Zero-copy drains land as wire
+        payloads (decoded here, CRC-verified against the carried
+        manifest — encoded ones through the wire codec); legacy pickled
+        trees flatten."""
         if self.external is None:
             return None
         rec = self.acks(step).get(nid, {}).get("drain")
@@ -474,23 +480,27 @@ class DistributedCheckpointer:
             return None
         ext = rec.get("external") or f"ckpt_step{step}_{nid}"
         try:
-            return self.external.get(ext)
+            obj = self.external.get(ext)
         except (IOError, OSError, FileNotFoundError):
             return None
+        if is_wire_object(obj):
+            return wire_leaves(obj)
+        return dict(_flatten(obj))
 
-    def _base_tree(self, nid: str, base_step: int,
-                   lost_nodes: Sequence[str] = ()):
-        """A delta chain's base payload for ``nid``, walking the same
-        recovery tiers as the shard itself: node-local slot, then the
-        ack-recorded replica targets (repair may have re-placed the
-        copy) with the base ring's buddy as the legacy fallback, then
-        the ack-recorded external drained copy."""
+    def _base_leaves(self, nid: str, base_step: int,
+                     lost_nodes: Sequence[str] = ()
+                     ) -> Dict[str, np.ndarray]:
+        """A delta chain's base payload for ``nid`` as flat leaves,
+        walking the same recovery tiers as the shard itself: node-local
+        slot, then the ack-recorded replica targets (repair may have
+        re-placed the copy) with the base ring's buddy as the legacy
+        fallback, then the ack-recorded external drained copy."""
         base_man = self._meta_get_json(
             f"ckpt/manifest_step{base_step}.json")
         base_name = f"ckpt/slot{base_man['slot']}"
         if nid not in lost_nodes:
             self._check_slot_step(self.stores[nid], base_name, base_step)
-            return self.stores[nid].get(base_name)
+            return dict(_flatten(self.stores[nid].get(base_name)))
         base_ring = base_man.get("nodes") or self.nodes
         rep = f"replica/{nid}/{base_name}"
         cands = [t for t in
@@ -505,10 +515,10 @@ class DistributedCheckpointer:
                 if self.stores[holder].exists(rep):
                     self._check_slot_step(self.stores[holder], rep,
                                           base_step)
-                    return self.stores[holder].get(rep)
+                    return dict(_flatten(self.stores[holder].get(rep)))
             except IOError:
                 continue  # holder pool unreadable too — keep walking
-        drained = self._drained_payload(nid, base_step)
+        drained = self._drained_leaves(nid, base_step)
         if drained is not None:
             return drained
         raise IOError(f"no readable base (step {base_step}) for {nid}: "
@@ -516,8 +526,7 @@ class DistributedCheckpointer:
 
     def _decode_delta(self, nid, payload, base_step, manifest,
                       lost_nodes: Sequence[str] = ()):
-        base = self._base_tree(nid, base_step, lost_nodes)
-        base_leaves = dict(_flatten(base))
+        base_leaves = self._base_leaves(nid, base_step, lost_nodes)
         out = {}
         for path, arr in payload.items():
             if path.endswith(".__ds"):
@@ -647,106 +656,195 @@ class DistributedCheckpointer:
                 lost_nodes: Sequence[str] = (),
                 nodes_subset: Optional[Sequence[str]] = None):
         """Reassemble the global pytree. Tolerates lost nodes (via buddy
-        replicas) and arbitrary re-sharding (byte-range reads)."""
+        replicas) and arbitrary re-sharding (byte-range reads). Full
+        (non-delta) shards are read leaf-by-leaf via byte-range
+        ``get_leaf`` against one manifest snapshot per holder — no
+        whole-shard payload is ever materialized, and encoded replicas
+        decode per leaf on demand."""
         if step is None:
             step = self.latest_step()
         manifest = self._meta_get_json(
             f"ckpt/manifest_step{step}.json")
+        leaves = self._assemble(step, manifest, None, lost_nodes)
+        return _unflatten(leaves), manifest
+
+    def restore_leaves(self, step: int, paths: Sequence[str], *,
+                       lost_nodes: Sequence[str] = ()
+                       ) -> Dict[str, np.ndarray]:
+        """Partial-shard restore: assemble ONLY the named leaves, each
+        read as a byte range from whichever tier holds its shards (own
+        slot, ack-recorded replica, drained copy) — the sibling leaves
+        are never touched. This is the enabler for N->M warm resize:
+        a resizing job pulls exactly the rows/leaves its new layout
+        needs while the old processes drain. On a delta-encoded step
+        the needed nodes' payloads are decoded first (a delta leaf is
+        not byte-addressable until decoded against its base); only the
+        requested leaves are returned either way."""
+        manifest = self._meta_get_json(
+            f"ckpt/manifest_step{step}.json")
+        missing = set(paths) - set(manifest["leaves"])
+        if missing:
+            raise KeyError(
+                f"step {step} has no leaves {sorted(missing)}")
+        return self._assemble(step, manifest, set(paths), lost_nodes)
+
+    def _assemble(self, step: int, manifest: dict,
+                  paths: Optional[set], lost_nodes: Sequence[str]
+                  ) -> Dict[str, np.ndarray]:
         slot = manifest["slot"]
         obj = f"ckpt/slot{slot}"
         ring = manifest.get("nodes") or self.nodes
-        cache: Dict[str, Dict[str, np.ndarray]] = {}
         acks = self.acks(step)  # one metadata read for all shards
+        delta = manifest.get("delta_base") is not None and self.delta
+        src_cache: Dict[str, tuple] = {}
+        payload_cache: Dict[str, Dict[str, np.ndarray]] = {}
 
-        def checked_read(src: str, name: str):
-            # CRC-verified read + step check against the SAME object
-            # manifest: torn or reused-slot data fails here rather
-            # than reassembling a mixed-step tree
-            tree_part, obj_man = self.stores[src].get_with_manifest(name)
-            got = obj_man.get("meta", {}).get("step")
-            if got != step:
-                raise IOError(f"{name} holds step {got}, wanted "
-                              f"{step} (slot reused)")
-            return tree_part
-
-        def pmem_part(nid: str):
-            """The shard from pmem: the node's own slot, or — for a lost
-            node — a replica from the ack-recorded targets (repair may
-            have moved it off the ring buddy), then the ring buddy for
-            pre-ack legacy steps. None when every copy is gone — the
-            caller then consults the drain tier."""
-            if nid not in lost_nodes:
-                return checked_read(nid, obj)
-            name = f"replica/{nid}/{obj}"
-            cands = [t for t in
-                     ack_targets(acks.get(nid, {}).get("replica"))
-                     if t not in lost_nodes]
-            legacy = self.buddy_of(nid, ring)
-            if legacy not in cands and legacy not in lost_nodes:
-                cands.append(legacy)
-            for src in cands:
-                try:
-                    if self.stores[src].exists(name):
-                        return checked_read(src, name)
-                except IOError:
-                    continue  # that holder's pool died too
-            return None
+        def source(nid: str) -> tuple:
+            """Resolve WHERE nid's shard lives, once per node:
+            ``("pmem", holder, name, obj_man)`` — step-checked against
+            the holder's object manifest — or ``("flat", leaves)`` from
+            the drain tier. Raises when every recorded copy is gone."""
+            if nid in src_cache:
+                return src_cache[nid]
+            s = self._locate_shard(nid, obj, step, acks, ring,
+                                   lost_nodes)
+            if s is None:
+                # drain-tier recovery: shard AND replica died — the
+                # recorded drain ack says an external copy exists
+                # (never probed blindly)
+                flat = self._drained_leaves(nid, step)
+                if flat is None:
+                    raise IOError(
+                        f"no replica of {nid} on "
+                        f"{self.buddy_of(nid, ring)} and no "
+                        f"acknowledged drain for step {step}")
+                s = ("flat", flat)
+            src_cache[nid] = s
+            return s
 
         def node_payload(nid: str) -> Dict[str, np.ndarray]:
-            if nid not in cache:
-                tree_part = pmem_part(nid)
-                if tree_part is None:
-                    # drain-tier recovery: shard AND replica died — the
-                    # recorded drain ack says an external copy exists
-                    # (never probed blindly)
-                    tree_part = self._drained_payload(nid, step)
-                    if tree_part is None:
-                        raise IOError(
-                            f"no replica of {nid} on "
-                            f"{self.buddy_of(nid, ring)} and no "
-                            f"acknowledged drain for step {step}")
-                payload = dict(_flatten(tree_part))
-                if manifest.get("delta_base") is not None and self.delta:
+            # whole-shard materialization: only the delta path needs it
+            # (every delta leaf decodes against the full base anyway)
+            if nid not in payload_cache:
+                s = source(nid)
+                if s[0] == "flat":
+                    payload = dict(s[1])
+                else:
+                    _, holder, name, _man = s
+                    tree_part, _ = self.stores[holder] \
+                        .get_with_manifest(name)
+                    payload = dict(_flatten(tree_part))
+                if delta:
                     payload = self._decode_delta(
                         nid, payload, manifest["delta_base"], manifest,
                         lost_nodes=lost_nodes)
-                cache[nid] = payload
-            return cache[nid]
+                payload_cache[nid] = payload
+            return payload_cache[nid]
+
+        def leaf_part(nid: str, path: str) -> np.ndarray:
+            if delta:
+                return node_payload(nid)[path]
+            s = source(nid)
+            if s[0] == "flat":
+                return s[1][path]
+            _, holder, name, obj_man = s
+            # byte-range read of ONE leaf against the step-checked
+            # manifest snapshot: siblings untouched, CRC verified,
+            # encoded replicas decoded on demand
+            return self.stores[holder].get_leaf(name, path, man=obj_man)
 
         leaves = {}
         for path, ent in manifest["leaves"].items():
+            if paths is not None and path not in paths:
+                continue
             shape = tuple(ent["shape"])
             dtype = np.dtype(ent["dtype"])
             if len(ent["shards"]) == 1:
                 nid, start, nrows = ent["shards"][0]
-                leaves[path] = node_payload(nid)[path].reshape(shape) \
+                leaves[path] = leaf_part(nid, path).reshape(shape) \
                     .astype(dtype)
             else:
                 parts = []
                 for nid, start, nrows in ent["shards"]:
-                    parts.append(node_payload(nid)[path])
+                    parts.append(leaf_part(nid, path))
                 leaves[path] = np.concatenate(parts, axis=0) \
                     .reshape(shape).astype(dtype)
-        return _unflatten(leaves), manifest
+        return leaves
+
+    def _locate_shard(self, nid: str, obj: str, step: int, acks: dict,
+                      ring: Sequence[str],
+                      lost_nodes: Sequence[str]) -> Optional[tuple]:
+        """The pmem holder of ``nid``'s shard: the node's own slot, or —
+        for a lost node — a replica from the ack-recorded targets
+        (repair may have moved it off the ring buddy), then the ring
+        buddy for pre-ack legacy steps. The holder's object manifest is
+        read ONCE here, step-checked (torn or reused-slot data fails
+        rather than reassembling a mixed-step tree) and returned so
+        every per-leaf read is served against the same snapshot. None
+        when every pmem copy is gone (caller consults the drain tier)."""
+        if nid not in lost_nodes:
+            man = self.stores[nid].manifest(obj)
+            got = man.get("meta", {}).get("step")
+            if got != step:
+                raise IOError(f"{obj} holds step {got}, wanted "
+                              f"{step} (slot reused)")
+            return ("pmem", nid, obj, man)
+        name = f"replica/{nid}/{obj}"
+        cands = [t for t in
+                 ack_targets(acks.get(nid, {}).get("replica"))
+                 if t not in lost_nodes]
+        legacy = self.buddy_of(nid, ring)
+        if legacy not in cands and legacy not in lost_nodes:
+            cands.append(legacy)
+        for src in cands:
+            try:
+                if self.stores[src].exists(name):
+                    man = self.stores[src].manifest(name)
+                    got = man.get("meta", {}).get("step")
+                    if got != step:
+                        raise IOError(
+                            f"{name} holds step {got}, wanted {step} "
+                            f"(slot reused)")
+                    return ("pmem", src, name, man)
+            except IOError:
+                continue  # that holder's pool died too
+        return None
 
     def restore_shard(self, step: int, path: str, start_row: int,
-                      n_rows: int) -> np.ndarray:
+                      n_rows: int, *,
+                      lost_nodes: Sequence[str] = ()) -> np.ndarray:
         """Elastic restore primitive: read an arbitrary row range of one
-        leaf straight from the owning nodes' pmem (byte-granular)."""
+        leaf straight from the owning nodes' pmem (byte-granular).
+        With ``lost_nodes``, a dead owner's rows come from its
+        ack-recorded replica (which may be codec-encoded — only the
+        covering tiles are decoded) or, failing that, its drained copy."""
         manifest = self._meta_get_json(
             f"ckpt/manifest_step{step}.json")
         ent = manifest["leaves"][path]
         slot = manifest["slot"]
+        obj = f"ckpt/slot{slot}"
+        ring = manifest.get("nodes") or self.nodes
         dtype = np.dtype(ent["dtype"])
+        acks = self.acks(step) if lost_nodes else {}
         pieces = []
         want_lo, want_hi = start_row, start_row + n_rows
         for nid, s0, nr in ent["shards"]:
             lo, hi = max(want_lo, s0), min(want_hi, s0 + nr)
             if lo >= hi:
                 continue
-            self._check_slot_step(self.stores[nid], f"ckpt/slot{slot}",
-                                  step)
-            piece = self.stores[nid].read_leaf_slice(
-                f"ckpt/slot{slot}", path, lo - s0, hi - lo)
+            s = self._locate_shard(nid, obj, step, acks, ring,
+                                   lost_nodes)
+            if s is not None:
+                _, holder, name, _man = s
+                piece = self.stores[holder].read_leaf_slice(
+                    name, path, lo - s0, hi - lo)
+            else:
+                flat = self._drained_leaves(nid, step)
+                if flat is None:
+                    raise IOError(
+                        f"no copy of {nid}'s rows [{lo}, {hi}) for "
+                        f"step {step}: pmem lost, replica lost, no "
+                        f"drain ack")
+                piece = np.asarray(flat[path])[lo - s0:hi - s0]
             pieces.append(piece)
         return np.concatenate(pieces, axis=0).astype(dtype)

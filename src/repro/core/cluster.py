@@ -28,7 +28,7 @@ class SimCluster:
                  external_bandwidth: Optional[float] = None,
                  buddy: bool = True, delta: bool = False,
                  dlm_capacity: int = 1 << 28, slots: int = 2,
-                 telemetry: bool = True):
+                 wire_codec=None, telemetry: bool = True):
         self.root = Path(root)
         self.node_ids = [f"node{i}" for i in range(n_nodes)]
         self.pools: Dict[str, PMemPool] = {
@@ -54,8 +54,10 @@ class SimCluster:
         # the unified async I/O engine (checkpoint + KV tiering + staging)
         self.dlm = DLMCache(self.stores[self.node_ids[0]],
                             capacity_bytes=dlm_capacity, obs=self.obs)
+        # ``wire_codec=True`` (or a spec dict) turns on the delta-int8
+        # wire codec for every replicate/drain/repair transfer
         self.tiered = TieredIO(self.checkpointer, self.scheduler, self.dlm,
-                               obs=self.obs)
+                               wire_codec=wire_codec, obs=self.obs)
         self.recovery = FailureRecovery(self.checkpointer, self.heartbeat,
                                         tiered=self.tiered)
         # the persistent dataset exchange: catalog replication rides the

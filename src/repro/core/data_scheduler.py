@@ -20,10 +20,13 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional
 
-import numpy as np
-
 from repro.analysis.annotations import rehydration_entry
-from repro.core.object_store import PMemObjectStore
+# SupersededError and _check_expect_meta live with the copy primitives
+# in object_store now; re-exported here for the existing import sites
+from repro.core.object_store import (PMemObjectStore,  # noqa: F401
+                                     SupersededError, _check_expect_meta,
+                                     copy_object, export_object,
+                                     import_object, is_wire_object)
 from repro.obs.metrics import Registry, StatsView
 
 
@@ -58,28 +61,6 @@ class ExternalStore:
 
     def exists(self, name: str) -> bool:
         return (self.root / (name.replace("/", "_") + ".pkl")).exists()
-
-
-class SupersededError(IOError):
-    """A queued transfer found its source already overwritten by a newer
-    version (e.g. checkpoint slot reuse outpacing a drain). Benign: the
-    newer object's own transfer covers it. Collected, never fatal."""
-
-
-def _check_expect_meta(man: dict, expect_meta: Optional[dict],
-                       verb: str, obj_name: str) -> None:
-    """Pin the object identity a queued transfer was meant for: raise
-    SupersededError when the snapshotted meta no longer matches (the
-    source was rewritten between submit and run)."""
-    if not expect_meta:
-        return
-    got = man.get("meta", {})
-    stale = {k: got.get(k) for k in expect_meta
-             if got.get(k) != expect_meta[k]}
-    if stale:
-        raise SupersededError(
-            f"{verb} {obj_name}: source changed before {verb} ran "
-            f"(wanted {expect_meta}, found {stale})")
 
 
 @dataclass(order=True)
@@ -202,10 +183,20 @@ class DataScheduler:
         (drain-tier rehydration stages a checkpoint shard back and must
         carry its step tag so restore's slot-reuse check still holds);
         ``on_complete`` runs inside the task once the pmem copy is
-        durable — same ack discipline as replicate/drain."""
+        durable — same ack discipline as replicate/drain. A wire payload
+        (the drain channel's export format) ingests through
+        ``import_object`` — leaf bytes land at manifest offsets with the
+        carried manifest committed over them, no tree is ever built, and
+        an encoded payload stays encoded (decoded on demand by readers);
+        legacy pickled trees still go through ``put``."""
         def go():
-            tree = self.external.get(external_name)
-            man = self.stores[nid].put(obj_name, tree, version, meta=meta)
+            obj = self.external.get(external_name)
+            if is_wire_object(obj):
+                man = import_object(self.stores[nid], obj, obj_name,
+                                    version, meta_update=meta)
+            else:
+                man = self.stores[nid].put(obj_name, obj, version,
+                                           meta=meta)
             self._counters[nid]["staged_in"].inc(man["nbytes"])
             if on_complete is not None:
                 on_complete(man)
@@ -219,24 +210,22 @@ class DataScheduler:
               delete_after: bool = False,
               expect_meta: Optional[dict] = None,
               on_complete: Optional[Callable[[Any], None]] = None,
+              codec=None,
               span: Optional[dict] = None) -> Future:
         def go():
-            # one manifest snapshot + CRC so a concurrent overwrite of
-            # the source (checkpoint slot reuse) raises instead of
-            # draining torn bytes; ``expect_meta`` additionally pins the
-            # object identity (e.g. checkpoint step) the caller intended.
-            try:
-                tree, man = self.stores[nid].get_with_manifest(
-                    obj_name, version)
-            except (IOError, ValueError) as e:
-                # torn/resized mid-overwrite or already deleted — a
-                # short region read surfaces as ValueError on reshape
-                raise SupersededError(
-                    f"drain {obj_name}: source rewritten before drain "
-                    f"ran ({e})") from e
-            _check_expect_meta(man, expect_meta, "drain", obj_name)
-            self.external.put(external_name, tree)
-            self._counters[nid]["drained"].inc(man["nbytes"])
+            # zero-copy export against ONE manifest snapshot: leaf bytes
+            # stream out CRC-verified (a concurrent slot reuse raises
+            # SupersededError instead of draining torn bytes) and are
+            # serialized exactly ONCE, at the external boundary below;
+            # ``expect_meta`` additionally pins the object identity
+            # (e.g. checkpoint step) the caller intended. ``codec``
+            # engages the delta-int8 wire codec on the exported bytes.
+            wire = export_object(self.stores[nid], obj_name, version,
+                                 expect_meta=expect_meta, codec=codec,
+                                 obs=self.obs)
+            self.external.put(external_name, wire)
+            self._counters[nid]["drained"].inc(
+                wire["manifest"]["nbytes"])
             if delete_after:
                 self.stores[nid].delete(obj_name, version)
             # ack hook: runs INSIDE the task, after the external copy is
@@ -255,40 +244,39 @@ class DataScheduler:
                   dst_name: Optional[str] = None,
                   expect_meta: Optional[dict] = None,
                   on_complete: Optional[Callable[[Any], None]] = None,
+                  codec=None,
                   span: Optional[dict] = None) -> Future:
         """Copy an object to another node's pmem under ``dst_name``
         (defaults to replica/<src>/<obj> so it never shadows the
         destination's own objects). ``expect_meta`` pins the object
         identity the caller intended (e.g. the checkpoint step);
         ``on_complete`` runs inside the task once the replica is placed —
-        the replication channel uses it to record per-node acks."""
+        the replication channel uses it to record per-node acks.
+        ``codec`` engages the delta-int8 wire codec at the source (an
+        already-encoded source raw-streams, never double-encodes)."""
         name = dst_name or f"replica/{src}/{obj_name}"
 
         def go():
-            # data + meta from ONE CRC-verified manifest snapshot: a
-            # concurrent overwrite of the source (checkpoint slot reuse
-            # racing this queued task) raises here instead of storing a
-            # replica whose step tag disagrees with its bytes. The
+            # zero-copy raw path against ONE manifest snapshot: region
+            # bytes stream src -> dst in bounded chunks with a rolling
+            # CRC checked against the manifest's own leaf CRCs, and the
+            # source manifest commits verbatim on dst. No tree is ever
+            # materialized and no CRC recomputed. A concurrent source
+            # overwrite (checkpoint slot reuse racing this queued task)
+            # raises SupersededError before the manifest commit — the
             # overwriting save queues its own replicate, so dropping
-            # this one is benign (SupersededError, filtered at join).
-            try:
-                tree, src_man = self.stores[src].get_with_manifest(
-                    obj_name, version)
-            except (IOError, ValueError) as e:
-                raise SupersededError(
-                    f"replicate {obj_name}: source rewritten before "
-                    f"replication ran ({e})") from e
-            _check_expect_meta(src_man, expect_meta, "replicate", obj_name)
-            # replica_of records the ORIGIN node. When repair copies an
-            # existing replica off a surviving holder, the source meta
-            # already carries the origin — preserve it instead of
-            # stamping the holder, so a twice-moved replica still says
-            # whose data it is.
-            src_meta = src_man.get("meta", {})
-            man = self.stores[dst].put(
-                name, tree, version,
-                meta={**src_meta,
-                      "replica_of": src_meta.get("replica_of", src)})
+            # this one is benign (filtered at join). Destination-side
+            # failures (dead pool, capacity) still propagate as real
+            # errors. replica_of records the ORIGIN node: when repair
+            # copies an existing replica off a surviving holder, the
+            # source meta already carries the origin — preserve it, so
+            # a twice-moved replica still says whose data it is.
+            man = copy_object(
+                self.stores[src], self.stores[dst], obj_name, version,
+                dst_name=name, expect_meta=expect_meta, codec=codec,
+                meta_update=lambda m: {
+                    "replica_of": m.get("replica_of", src)},
+                obs=self.obs)
             self._counters[src]["replicated"].inc(man["nbytes"])
             # ack hook after the replica is durable on ``dst`` — a
             # failure here fails the task, never records a false ack

@@ -184,26 +184,35 @@ class PMemPool:
 
     def rename(self, src: str, dst: str) -> None:
         """Atomically replace region ``dst`` with ``src`` (POSIX rename)
-        — the commit point of log compaction: the compacted file becomes
-        the log in one step, so a crash leaves either the old log or the
-        new one, never a torn mix. Open handles to both names are
-        closed and evicted (re-``open`` maps the new file)."""
+        — the commit point of log compaction and of every shadow-region
+        data install: the new file becomes the name in one step, so a
+        crash leaves either the old bytes or the new ones, never a torn
+        mix. Open handles to both names are flushed (if dirty) and
+        evicted from the cache — a re-``open`` maps the new file — but
+        NOT unmapped: a concurrent reader still holding the old ``dst``
+        region object keeps its own mapping of the replaced inode,
+        which stays fully consistent (just superseded) instead of
+        faulting mid-read. Copy writers recheck source-manifest
+        freshness at their commit point for exactly this reason
+        (object_store.copy_object)."""
         with self._lock:
             self._check_alive()
             for name in (src, dst):
                 r = self._open.pop(name, None)
-                if r is not None:
-                    r.close()
+                if r is not None and r.dirty:
+                    r.flush()
             os.replace(self._path(src), self._path(dst))
 
     def exists(self, name: str) -> bool:
         return not self._dead and self._path(name).exists()
 
     def delete(self, name: str) -> None:
+        # same eviction discipline as rename: flush a dirty handle but
+        # leave the mapping alive for any reader mid-stream on it
         with self._lock:
             r = self._open.pop(name, None)
-            if r is not None:
-                r.close()
+            if r is not None and r.dirty:
+                r.flush()
             p = self._path(name)
             if p.exists():
                 p.unlink()

@@ -165,6 +165,48 @@ sits on a single pmem copy. ``RepairDaemon`` closes it:
     scratch; the daemon never quiesces foreground work, which is safe
     because acks only ever describe already-durable transfers.
 
+Zero-copy byte-range data plane and the wire codec
+--------------------------------------------------
+Every channel above moves bytes through the object store's raw copy
+primitives (``copy_object``/``export_object``/``import_object``) — no
+transfer materializes a tree. The durability contract each channel
+inherits from them:
+
+  * **Replicate (pmem -> pmem)**: the backing region streams src -> dst
+    in bounded chunks, each chunk flushed before the next is written; a
+    rolling CRC per physical segment is checked against the SOURCE
+    manifest's own leaf CRCs, and that manifest commits on dst verbatim
+    (same leaf table, same digests). The commit point is the dst pool's
+    atomic manifest rename — a crash at ANY earlier instruction leaves
+    data bytes without a manifest, invisible to every reader and to
+    recovery. Acks record only after the commit returns, so the ack map
+    still under-promises. A source overwritten mid-copy (slot reuse)
+    fails the CRC or the manifest snapshot check and raises the benign
+    ``SupersededError`` — never a torn replica.
+  * **Drain (pmem -> external)**: ``export_object`` reads the region
+    once against one manifest snapshot and serializes exactly once, at
+    the external-store boundary; stage-in ingests the wire payload with
+    ``import_object`` (leaf bytes at manifest offsets, carried manifest
+    committed over them) so a rehydrated shard is byte-identical to the
+    drained one, CRCs included.
+  * **Wire codec (opt-in, ``wire_codec=``)**: the pallas delta-int8
+    codec encodes eligible float leaves at the SOURCE of replicate /
+    drain / repair transfers; encoded tiles + per-tile scales land on
+    the destination with their own CRCs recorded in the manifest's
+    ``meta["wire_codec"]`` — the leaf table keeps the ORIGINAL digests,
+    so acks, repair scans and ``content_digest`` stay metadata-only and
+    encoding-invariant. Readers decode on demand (``get_leaf`` /
+    ``read_leaf_slice`` decode just the tiles they touch); strict mode
+    (default) snaps scales to powers of two and verifies round-trip
+    bit-equality at encode time, falling back to raw per leaf when the
+    data won't survive quantization. A second-hop copy of an encoded
+    replica raw-streams the encoded segments — never double-encodes.
+  * **Byte-range reads**: ``fetch_leaf`` (DLM), ``get_leaf`` and
+    ``DistributedCheckpointer.restore_leaves``/``restore_shard`` read
+    only the byte range of the leaves they need — sibling leaves are
+    never touched, which is what makes N->M warm resize and partial
+    KV-page reads O(bytes needed), not O(object).
+
 Telemetry plane — metrics, spans, and the crash-persistent recorder
 -------------------------------------------------------------------
 Every channel reports into an optional ``TelemetryPlane``
@@ -212,7 +254,9 @@ from repro.core.checkpoint import DistributedCheckpointer
 from repro.core.data_scheduler import DataScheduler, SupersededError
 from repro.core.dataset_exchange import ack_targets, read_json_copies
 from repro.core.meta_log import MetaLog
+from repro.core.object_store import _flatten
 from repro.core.tiering import DLMCache
+from repro.core.wire_codec import normalize_codec
 from repro.obs.metrics import Registry, StatsView
 from repro.obs.trace import ctx as _span_ctx
 
@@ -324,10 +368,13 @@ class ReplicationChannel:
     """
 
     def __init__(self, checkpointer: DistributedCheckpointer,
-                 scheduler: DataScheduler, obs=None):
+                 scheduler: DataScheduler, obs=None, codec=None):
         self.checkpointer = checkpointer
         self.scheduler = scheduler
         self.obs = obs
+        # wire codec spec (already normalized by TieredIO): encodes at
+        # the source of every replicate/drain this channel submits
+        self.codec = codec
         reg = obs.registry if obs is not None else Registry()
         # submit -> durable-ack wall clock, per transfer (the QoS
         # feedback signal ROADMAP item 5 needs)
@@ -365,7 +412,7 @@ class ReplicationChannel:
                     info["trace"] = tid
                 futs.append(self.scheduler.replicate(
                     nid, obj, buddy, expect_meta={"step": step},
-                    span=_span_ctx(sp),
+                    codec=self.codec, span=_span_ctx(sp),
                     on_complete=self._ack(step, nid, "replica", info,
                                           span=sp)))
         if drain and ckpt.external is not None:
@@ -378,7 +425,7 @@ class ReplicationChannel:
                     info["trace"] = tid
                 futs.append(self.scheduler.drain(
                     nid, obj, ext, expect_meta={"step": step},
-                    span=_span_ctx(sp),
+                    codec=self.codec, span=_span_ctx(sp),
                     on_complete=self._ack(step, nid, "drain", info,
                                           span=sp)))
         if sink is not None:
@@ -397,6 +444,7 @@ class ReplicationChannel:
         registry records per-object acks through it."""
         return self.scheduler.replicate(src, name, dst, dst_name=dst_name,
                                         expect_meta=expect_meta,
+                                        codec=self.codec,
                                         on_complete=on_complete)
 
     def _ack(self, step: int, nid: str, kind: str, info: dict,
@@ -428,9 +476,10 @@ class ExchangeChannel:
     over-promises it. TieredIO tracks the futures so ``quiesce``/``join``
     cover in-flight dataset replication alongside checkpoints."""
 
-    def __init__(self, scheduler: DataScheduler, track=None):
+    def __init__(self, scheduler: DataScheduler, track=None, codec=None):
         self.scheduler = scheduler
         self._track = track  # TieredIO future-tracking hook
+        self.codec = codec   # wire codec for dataset replica fan-out
 
     @rehydration_entry
     def submit(self, src: str, obj: str, dst: str, *, version: int = 0,
@@ -447,6 +496,7 @@ class ExchangeChannel:
         fut = self.scheduler.replicate(src, obj, dst, version=version,
                                        dst_name=dst_name,
                                        expect_meta=expect_meta,
+                                       codec=self.codec,
                                        on_complete=on_ack,
                                        priority=priority, span=span)
         if self._track is not None:
@@ -800,6 +850,7 @@ class RepairChannel:
                               sched.replicate(
                                   s, so, n, dst_name=f"replica/{ni}/{o}",
                                   expect_meta={"step": st},
+                                  codec=self.tiered.wire_codec,
                                   on_complete=a, **prio)})
 
     def _plan_rehydration(self, step: int, nid: str, slot: int,
@@ -855,6 +906,7 @@ class RepairChannel:
                 "submit": lambda: sched.replicate(
                     t1, rep, t2, dst_name=rep,
                     expect_meta={"step": step},
+                    codec=self.tiered.wire_codec,
                     on_complete=ack_pair, **prio)}
         plans.append(stage)
 
@@ -888,6 +940,7 @@ class RepairChannel:
                           "submit": lambda s=survivor, so=src_obj, n=new,
                           h=home, nm=name, a=ack: sched.replicate(
                               s, so, n, dst_name=f"replica/{h}/{nm}",
+                              codec=self.tiered.wire_codec,
                               on_complete=a, **prio)})
 
     @metadata_only
@@ -933,6 +986,7 @@ class RepairChannel:
                 return sched.replicate(
                     survivor, src_obj, new, version=v, dst_name=dst_name,
                     expect_meta={"dataset": name, "version": v},
+                    codec=self.tiered.wire_codec,
                     on_complete=ack, **prio)
             plans.append({"surface": "dataset", "counter": "dataset",
                           "obj": key, "survivor": survivor, "new": new,
@@ -1128,25 +1182,31 @@ class TieredIO:
                  scheduler: Optional[DataScheduler] = None,
                  cache: Optional[DLMCache] = None,
                  max_inflight_saves: Optional[int] = None,
-                 obs=None):
+                 wire_codec=None, obs=None):
         self.checkpointer = checkpointer
         self.scheduler = scheduler
         self.cache = cache
         self.obs = obs
+        # opt-in delta-int8 wire codec for every fabric/external
+        # transfer this engine submits (True -> defaults, or a spec
+        # dict); None keeps every channel raw
+        self.wire_codec = normalize_codec(wire_codec)
         reg = obs.registry if obs is not None else Registry()
         # the replication channel owns ALL replicate/drain fan-out; the
         # checkpointer delegates to it at every save commit
         self.replication: Optional[ReplicationChannel] = None
         if checkpointer is not None and scheduler is not None:
             self.replication = ReplicationChannel(checkpointer, scheduler,
-                                                  obs=obs)
+                                                  obs=obs,
+                                                  codec=self.wire_codec)
             checkpointer.replication = self.replication
         # dataset-exchange fan-out (catalog attached via attach_catalog)
         self.exchange: Optional[ExchangeChannel] = None
         self.catalog = None
         if scheduler is not None:
             self.exchange = ExchangeChannel(scheduler,
-                                            track=self._track_future)
+                                            track=self._track_future,
+                                            codec=self.wire_codec)
         # home node of the DLM cache (whose store it fronts): replica
         # fallback reads resolve relative to it
         self._home_nid: Optional[str] = None
@@ -1415,12 +1475,10 @@ class TieredIO:
             self._futures.append(fut)
         return fut
 
-    def _dlm_replica_read(self, name: str):
-        """Multi-node DLM fallback: when the home node's pool is dead
-        (or no longer holds ``dlm/<name>``), read the buddy replica
-        placed by ``offload``/``repair`` — preferring the ack-recorded
-        targets, then the home's ring buddy, then any surviving node
-        holding ``replica/<home>/dlm/<name>``."""
+    def _dlm_candidates(self, name: str) -> Tuple[str, List[str]]:
+        """Replica name + fallback read order for ``dlm/<name>``:
+        ack-recorded targets first, then the home's ring buddy, then
+        every other surviving node (home itself excluded)."""
         ckpt = self.checkpointer
         home = self._home_nid
         assert ckpt is not None and home is not None
@@ -1429,12 +1487,24 @@ class TieredIO:
             if self.dlm_acks is not None else []
         order = acked + [ckpt.buddy_of(home)] + \
             [n for n in ckpt.nodes if n != home]
-        seen = set()
+        out: List[str] = []
+        seen: Set[str] = set()
+        for nid in order:
+            if nid not in seen and nid != home:
+                seen.add(nid)
+                out.append(nid)
+        return rep, out
+
+    def _dlm_replica_read(self, name: str):
+        """Multi-node DLM fallback: when the home node's pool is dead
+        (or no longer holds ``dlm/<name>``), read the buddy replica
+        placed by ``offload``/``repair`` — preferring the ack-recorded
+        targets, then the home's ring buddy, then any surviving node
+        holding ``replica/<home>/dlm/<name>``."""
+        ckpt = self.checkpointer
+        rep, order = self._dlm_candidates(name)
         last: Optional[Exception] = None
         for nid in order:
-            if nid in seen or nid == home:
-                continue
-            seen.add(nid)
             try:
                 if ckpt.stores[nid].exists(rep):
                     return ckpt.stores[nid].get(rep)
@@ -1443,7 +1513,42 @@ class TieredIO:
         if last is not None:
             raise last
         raise FileNotFoundError(
-            f"dlm/{name} (home {home} unreadable and no node holds {rep})")
+            f"dlm/{name} (home {self._home_nid} unreadable and no node "
+            f"holds {rep})")
+
+    def fetch_leaf(self, name: str, leaf: str):
+        """Byte-range demand read: ONE leaf of ``dlm/<name>`` without
+        touching its siblings. A DRAM-resident cache copy serves from
+        memory (it may be dirtier than pmem); otherwise the leaf's byte
+        range is read straight from the home pool — falling back to
+        acked replicas exactly like ``fetch`` — decoding only the tiles
+        of that leaf when the copy travelled wire-encoded. The partial
+        object is never admitted into the cache. Raises ``KeyError``
+        when the object exists but has no such leaf."""
+        if self.cache is not None and self.cache.contains(name):
+            flat = dict(_flatten(self.cache.get(name)))
+            if leaf not in flat:
+                raise KeyError(leaf)
+            return flat[leaf]
+        ckpt = self.checkpointer
+        home = self._home_nid
+        assert ckpt is not None and home is not None, "no pmem backend"
+        try:
+            return ckpt.stores[home].get_leaf(f"dlm/{name}", leaf)
+        except IOError:
+            pass  # home pool dead or object gone — walk the replicas
+        rep, order = self._dlm_candidates(name)
+        last: Optional[Exception] = None
+        for nid in order:
+            try:
+                if ckpt.stores[nid].exists(rep):
+                    return ckpt.stores[nid].get_leaf(rep, leaf)
+            except IOError as e:
+                last = e
+        if last is not None:
+            raise last
+        raise FileNotFoundError(f"dlm/{name} leaf {leaf!r} (home {home} "
+                                f"unreadable and no node holds {rep})")
 
     def fetch(self, name: str):
         """Demand read through the DLM cache (hit/miss accounted), or

@@ -113,6 +113,19 @@ class ServeEngine:
             obs.counter("serve.resumes").inc()
             obs.end(sp)
 
+    def peek_session(self, name: str, leaf: str) -> np.ndarray:
+        """Byte-range peek at ONE leaf of a spilled session — a single
+        layer's KV page, or the ``pos`` cursor — without rehydrating
+        the rest of the cache. The read covers exactly that leaf's
+        bytes on pmem (home pool first, then acked replicas when the
+        home died), decoding only its own tiles when the spill
+        travelled wire-encoded; nothing is admitted into the DLM cache
+        and ``self.cache`` is untouched. This is how a scheduler can
+        inspect a cold session (how far did it decode? how big is its
+        KV?) at O(leaf) cost instead of O(session)."""
+        assert self.tiered is not None, "peek needs a TieredIO engine"
+        return self.tiered.fetch_leaf(f"serve/{name}", leaf)
+
     def prefetch_sessions(self, names: List[str]):
         """Warm cold session state pmem -> DRAM ahead of resume (Fig. 8
         prefetch). Returns the TieredIO future (hit/load counts)."""

@@ -113,10 +113,13 @@ def test_unreplicated_step_is_not_repairs_business(cluster):
     assert not report["errors"]
 
 
-def test_repair_scan_reads_only_the_copies_it_makes(cluster):
-    """Zero blind probes: every object-store read during repair is the
-    source of a copy actually made — the scan itself decides from ack
-    records and catalog metadata alone."""
+def test_repair_scan_reads_only_the_copies_it_makes(cluster, monkeypatch):
+    """Zero blind probes: every object-store access during repair is the
+    source of a raw-path copy actually made — the scan itself decides
+    from ack records and catalog metadata alone, and the copies stream
+    region bytes without ever materializing a tree (so the tree-read
+    entry points are never touched at all)."""
+    from repro.core import data_scheduler as ds
     c = cluster
     c.tiered.save_async(1, _tree(4)).result(timeout=30)
     c.tiered.offload("serve/sess", _tree(5)).result(timeout=30)
@@ -125,15 +128,24 @@ def test_repair_scan_reads_only_the_copies_it_makes(cluster):
     c.kill_node("node1")
     c.tiered.quiesce()
     reads = _record_store_reads(c)
+    copies = []
+    orig_copy = ds.copy_object
+
+    def copy_object(src, dst, name, *a, **k):
+        copies.append(name)
+        return orig_copy(src, dst, name, *a, **k)
+    monkeypatch.setattr(ds, "copy_object", copy_object)
     report = c.tiered.repair(["node1"])
     assert report["repaired"] and not report["errors"]
-    # exactly one source read per repaired object (the copy itself) and
-    # nothing else: the scan never probes the store
-    assert len(reads) == len(report["repaired"]), (reads, report)
+    # exactly one raw-path source copy per repaired object and nothing
+    # else: the scan never probes the store, and no repair copy ever
+    # deserializes a tree (get_with_manifest/exists untouched)
+    assert len(copies) == len(report["repaired"]), (copies, report)
+    assert reads == [], f"tree reads/probes during repair: {reads}"
     copied_prefixes = ("ckpt/slot", "replica/", "dlm/", "wf/")
-    for name in reads:
+    for name in copies:
         assert name.startswith(copied_prefixes), \
-            f"unexpected store read during repair: {name}"
+            f"unexpected copy source during repair: {name}"
 
 
 def test_repair_skips_slot_reused_steps_on_metadata(cluster):

@@ -234,11 +234,14 @@ def test_rehydration_disabled_counts_drain_only(cluster):
     assert report["drain_only"] == 1 and report["unrepairable"] >= 1
 
 
-def test_rehydration_scan_zero_blind_probes(cluster):
-    """The rehydrating scan stays metadata-only: every store read is
-    the source of a copy actually made (the staged shard feeding its
-    new buddy, or a surviving replica being re-replicated) — the only
-    external reads are the rehydration sources."""
+def test_rehydration_scan_zero_blind_probes(cluster, monkeypatch):
+    """The rehydrating scan stays metadata-only: every store access is
+    the source of a raw-path copy actually made (the staged shard
+    feeding its new buddy, or a surviving replica being re-replicated)
+    — the only external reads are the rehydration sources, and no copy
+    ever materializes a tree (the tree-read entry points stay
+    untouched)."""
+    from repro.core import data_scheduler as ds
     c = cluster
     c.tiered.save_async(1, _tree(5), drain=True).result(timeout=30)
     c.tiered.quiesce()
@@ -246,18 +249,26 @@ def test_rehydration_scan_zero_blind_probes(cluster):
     c.kill_node("node2")
     c.tiered.quiesce()
     reads = _record_store_reads(c)
+    copies = []
+    orig_copy = ds.copy_object
+
+    def copy_object(src, dst, name, *a, **k):
+        copies.append(name)
+        return orig_copy(src, dst, name, *a, **k)
+    monkeypatch.setattr(ds, "copy_object", copy_object)
     ext_reads = []
     orig_ext_get = c.external.get
     c.external.get = lambda name: (ext_reads.append(name),
                                    orig_ext_get(name))[1]
     report = c.repair(["node1", "node2"])
     assert report["rehydrated"] == 1 and not report["errors"]
-    # one source read per copy made (incl. the staged shard read once
-    # to place its buddy), nothing probed
-    assert len(reads) == len(report["repaired"]), (reads, report)
-    for name in reads:
+    # one raw-path source copy per repair made (incl. the staged shard
+    # copied once to place its buddy), nothing probed, no tree built
+    assert len(copies) == len(report["repaired"]), (copies, report)
+    assert reads == [], f"tree reads/probes during repair: {reads}"
+    for name in copies:
         assert name.startswith(("ckpt/slot", "replica/", "dlm/", "wf/")), \
-            f"unexpected store read during repair: {name}"
+            f"unexpected copy source during repair: {name}"
     # the single external read is the rehydration source
     assert ext_reads == ["ckpt_step1_node1"]
 

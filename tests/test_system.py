@@ -31,7 +31,8 @@ def test_fig8_sequence_end_to_end(cluster):
         if cluster.external.exists("report"):
             break
         import time; time.sleep(0.02)
-    rep = cluster.external.get("report")
+    from repro.core.object_store import as_tree
+    rep = as_tree(cluster.external.get("report"))
     assert abs(float(rep["mean"][0]) - 99.0) < 1e-6
 
 

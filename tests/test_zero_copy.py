@@ -1,0 +1,348 @@
+"""Zero-copy byte-range data plane: raw pmem->pmem copy, byte-range
+leaf reads, crash-state enumeration of the copy path, and the delta-int8
+wire codec on the replicate/drain channels (ROADMAP item 4)."""
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.object_store import (PMemObjectStore, content_digest,
+                                     copy_object, export_object,
+                                     import_object, wire_tree)
+from repro.core.pmem import PMemPool
+
+
+def _tree(seed=0, n=256):
+    r = np.random.RandomState(seed)
+    return {"layer": {"w": r.randn(n, 8).astype(np.float32),
+                      "b": r.randn(8).astype(np.float32)},
+            "ids": np.arange(n, dtype=np.int32)}
+
+
+def _qtree(seed=0, n=2048):
+    """Quantization-friendly state: integer-grid float leaves survive
+    the strict delta-int8 codec bit-exactly (scale snaps to 1.0), so
+    these trees actually travel encoded rather than falling back to
+    raw per leaf."""
+    r = np.random.RandomState(seed)
+    return {"layer": {"w": r.randint(-100, 100, (n, 8))
+                      .astype(np.float32),
+                      "b": r.randn(8).astype(np.float32)},
+            "ids": np.arange(n, dtype=np.int32)}
+
+
+def _two_stores(tmp_path):
+    pools = {n: PMemPool(Path(tmp_path), n) for n in ("a", "b")}
+    return {n: PMemObjectStore(p) for n, p in pools.items()}
+
+
+# ---------------------------------------------------------------------------
+# tentpole layer 1: raw copy path + byte-range reads
+# ---------------------------------------------------------------------------
+
+def test_copy_object_commits_source_manifest_verbatim(tmp_path):
+    st = _two_stores(tmp_path)
+    tree = _tree(1)
+    man_src = st["a"].put("obj", tree, meta={"step": 7})
+    man_dst = copy_object(st["a"], st["b"], "obj",
+                          expect_meta={"step": 7})
+    # leaf table verbatim: same CRCs, offsets, shapes — no recompute
+    assert man_dst["leaves"] == man_src["leaves"]
+    assert man_dst["nbytes"] == man_src["nbytes"]
+    assert man_dst["meta"]["step"] == 7
+    assert content_digest(man_dst) == content_digest(man_src)
+    out = st["b"].get("obj", verify=True)
+    np.testing.assert_array_equal(out["layer"]["w"], tree["layer"]["w"])
+    np.testing.assert_array_equal(out["ids"], tree["ids"])
+
+
+def test_copy_object_never_materializes_a_tree(tmp_path, monkeypatch):
+    """The acceptance-criteria audit in unit form: the pmem->pmem raw
+    path must never invoke _flatten/_unflatten."""
+    import repro.core.object_store as mod
+    st = _two_stores(tmp_path)
+    st["a"].put("obj", _tree(2))
+    calls = []
+    orig_f, orig_u = mod._flatten, mod._unflatten
+    monkeypatch.setattr(mod, "_flatten",
+                        lambda *a, **k: calls.append("flatten")
+                        or orig_f(*a, **k))
+    monkeypatch.setattr(mod, "_unflatten",
+                        lambda *a, **k: calls.append("unflatten")
+                        or orig_u(*a, **k))
+    copy_object(st["a"], st["b"], "obj")
+    assert calls == [], f"tree materialized on the raw path: {calls}"
+
+
+def test_get_leaf_reads_one_leaf_without_touching_siblings(tmp_path):
+    st = _two_stores(tmp_path)["a"]
+    tree = _tree(3)
+    st.put("obj", tree)
+    np.testing.assert_array_equal(st.get_leaf("obj", "layer/b"),
+                                  tree["layer"]["b"])
+    # corrupt a SIBLING leaf: the byte-range read of the healthy leaf
+    # must still succeed (it never maps the sibling's range) while the
+    # whole-object read fails its CRC
+    man = st.manifest("obj")
+    region = st.pool.open("objects/obj@v0.data")
+    region._mm[man["leaves"]["ids"]["offset"] + 1] ^= 0xFF
+    np.testing.assert_array_equal(st.get_leaf("obj", "layer/w"),
+                                  tree["layer"]["w"])
+    with pytest.raises(IOError):
+        st.get("obj", verify=True)
+    with pytest.raises(IOError):
+        st.get_leaf("obj", "ids")
+    with pytest.raises(KeyError):
+        st.get_leaf("obj", "nope")
+
+
+def test_read_leaf_slice_returns_owned_copy(tmp_path):
+    """Regression (live-memmap-view bug): a slice held across an
+    overwrite of the same object must keep its original bytes."""
+    st = _two_stores(tmp_path)["a"]
+    arr = np.arange(64, dtype=np.float32).reshape(16, 4)
+    st.put("obj", {"x": arr})
+    sl = st.read_leaf_slice("obj", "x", 4, 3)
+    leaf = st.get_leaf("obj", "x")
+    st.put("obj", {"x": np.zeros_like(arr)})  # slot-reuse analogue
+    np.testing.assert_array_equal(sl, arr[4:7])
+    np.testing.assert_array_equal(leaf, arr)
+
+
+def test_get_with_manifest_verify_crc_over_read_buffer(tmp_path):
+    """Regression (double-materialization fix): verify still catches a
+    flipped byte when the CRC runs directly over the read buffer."""
+    st = _two_stores(tmp_path)["a"]
+    st.put("obj", _tree(4))
+    region = st.pool.open("objects/obj@v0.data")
+    region._mm[5] ^= 0xFF
+    with pytest.raises(IOError):
+        st.get_with_manifest("obj", verify=True)
+
+
+def test_copy_superseded_source_is_benign(tmp_path):
+    from repro.core.object_store import SupersededError
+    st = _two_stores(tmp_path)
+    st["a"].put("obj", _tree(5), meta={"step": 1})
+    st["a"].put("obj", _tree(6), meta={"step": 2})  # overwritten
+    with pytest.raises(SupersededError):
+        copy_object(st["a"], st["b"], "obj", expect_meta={"step": 1})
+    assert not st["b"].exists("obj")
+
+
+# ---------------------------------------------------------------------------
+# satellite: crash mid-copy — partial replica never committed nor acked
+# ---------------------------------------------------------------------------
+
+def test_crash_mid_copy_never_commits_partial_replica(pmem_sanitizer):
+    """Enumerate every crash state of the copy's destination writes:
+    the chunks stream into a shadow region no manifest ever references,
+    so a crash at ANY write leaves the destination store without the
+    object — and a commit-point failure propagates without an ack."""
+    tmp = Path(tempfile.mkdtemp(prefix="repro_zc_"))
+    st = _two_stores(tmp)
+    st["a"].put("obj", _tree(7), meta={"step": 3})
+    acked = []
+    orig = st["b"].pool.put_json
+
+    def failing_put_json(name, obj):
+        if name.endswith(".manifest"):
+            raise IOError("injected crash at the commit point")
+        return orig(name, obj)
+
+    st["b"].pool.put_json = failing_put_json
+    with pytest.raises(IOError):
+        man = copy_object(st["a"], st["b"], "obj",
+                          expect_meta={"step": 3}, chunk_bytes=1024)
+        acked.append(man)  # never reached: ack hooks run after commit
+    st["b"].pool.put_json = orig
+    assert acked == []
+    assert not st["b"].exists("obj")
+    # every torn/lost/persisted image of the destination writes lives
+    # under a shadow name — materializing it cannot make the object
+    # visible because visibility IS the manifest commit
+    images = [(label, img) for label, img
+              in pmem_sanitizer.crash_images("b/objects/obj")
+              if ".data" in label]
+    assert images, "no destination write states captured"
+    for label, img in images:
+        assert ".shadow" in label
+        pmem_sanitizer.materialize(img, st["b"].pool,
+                                   "objects/obj@v0.data")
+        assert not st["b"].exists("obj"), label
+    # the copy retries cleanly after the crash and commits whole
+    man = copy_object(st["a"], st["b"], "obj", expect_meta={"step": 3})
+    out = st["b"].get("obj", verify=True)
+    np.testing.assert_array_equal(out["layer"]["w"],
+                                  _tree(7)["layer"]["w"])
+    assert man["meta"]["step"] == 3
+
+
+def test_failed_replicate_records_no_ack(cluster):
+    """Channel-level version of the same invariant: a replicate whose
+    destination pool dies mid-task must not land an ack."""
+    t = cluster.tiered.save_async(1, _tree(8))
+    t.result(timeout=30)
+    cluster.tiered.quiesce()
+    buddy = cluster.checkpointer.buddy_of("node0")
+    cluster.kill_node(buddy)
+    fut = cluster.scheduler.replicate(
+        "node0", "ckpt/slot0", buddy, expect_meta={"step": 1},
+        on_complete=lambda man: pytest.fail("acked a dead-pool copy"))
+    with pytest.raises(IOError):
+        fut.result(timeout=30)
+
+
+# ---------------------------------------------------------------------------
+# tentpole layer 4: codec on the wire
+# ---------------------------------------------------------------------------
+
+def test_copy_encoded_roundtrips_bit_exact(tmp_path):
+    st = _two_stores(tmp_path)
+    tree = _qtree(9)
+    st["a"].put("obj", tree)
+    man = copy_object(st["a"], st["b"], "obj", codec=True)
+    wc = man["meta"]["wire_codec"]
+    modes = {p: e["mode"] for p, e in wc["leaves"].items()}
+    assert modes["layer/w"] == "delta8"  # big float leaf encodes
+    assert wc["nbytes_encoded"] < man["nbytes"]
+    # original digests survive the encoding: acks/repair stay
+    # encoding-invariant
+    assert man["leaves"] == st["a"].manifest("obj")["leaves"]
+    out = st["b"].get("obj", verify=True)
+    for path in ("layer/w", "layer/b"):
+        a, b = path.split("/")
+        np.testing.assert_array_equal(out[a][b], tree[a][b])
+    np.testing.assert_array_equal(out["ids"], tree["ids"])
+    # byte-range reads decode only the covering tiles
+    np.testing.assert_array_equal(
+        st["b"].read_leaf_slice("obj", "layer/w", 100, 17),
+        tree["layer"]["w"][100:117])
+    np.testing.assert_array_equal(st["b"].get_leaf("obj", "layer/w"),
+                                  tree["layer"]["w"])
+
+
+def test_second_hop_copy_never_double_encodes(tmp_path):
+    pools = {n: PMemPool(Path(tmp_path), n) for n in ("a", "b", "c")}
+    st = {n: PMemObjectStore(p) for n, p in pools.items()}
+    tree = _qtree(10)
+    st["a"].put("obj", tree)
+    man1 = copy_object(st["a"], st["b"], "obj", codec=True)
+    man2 = copy_object(st["b"], st["c"], "obj", codec=True)
+    # the encoded segment table raw-streams verbatim
+    assert man2["meta"]["wire_codec"]["leaves"] == \
+        man1["meta"]["wire_codec"]["leaves"]
+    out = st["c"].get("obj", verify=True)
+    np.testing.assert_array_equal(out["layer"]["w"], tree["layer"]["w"])
+
+
+def test_export_import_roundtrip_codec_on_and_off(tmp_path):
+    st = _two_stores(tmp_path)
+    tree = _qtree(11)
+    st["a"].put("obj", tree, meta={"step": 4})
+    for codec in (None, True):
+        wire = export_object(st["a"], "obj", expect_meta={"step": 4},
+                             codec=codec)
+        dec = wire_tree(wire)
+        np.testing.assert_array_equal(dec["layer"]["w"],
+                                      tree["layer"]["w"])
+        man = import_object(st["b"], wire, "staged")
+        out = st["b"].get("staged", verify=True)
+        np.testing.assert_array_equal(out["layer"]["w"],
+                                      tree["layer"]["w"])
+        np.testing.assert_array_equal(out["ids"], tree["ids"])
+        assert man["leaves"] == st["a"].manifest("obj")["leaves"]
+
+
+def test_import_rejects_corrupt_wire_bytes(tmp_path):
+    st = _two_stores(tmp_path)
+    st["a"].put("obj", _tree(12))
+    wire = export_object(st["a"], "obj")
+    path = next(iter(wire["leaves"]))
+    blob = bytearray(wire["leaves"][path]["data"])
+    blob[0] ^= 0xFF
+    wire["leaves"][path]["data"] = bytes(blob)
+    with pytest.raises(IOError):
+        import_object(st["b"], wire, "staged")
+    assert not st["b"].exists("staged")
+
+
+# ---------------------------------------------------------------------------
+# cluster-level: codec-on channels, partial restore, fetch_leaf
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def cluster_codec():
+    from repro.core.cluster import SimCluster
+    root = Path(tempfile.mkdtemp(prefix="repro_test_"))
+    c = SimCluster(root, n_nodes=4, wire_codec=True)
+    yield c
+    c.shutdown()
+
+
+def test_codec_cluster_replicate_restore_bit_equal(cluster_codec):
+    c = cluster_codec
+    state = _qtree(13)
+    t = c.tiered.save_async(1, state, drain=True)
+    t.result(timeout=30)
+    c.tiered.quiesce()
+    assert t.durability() == "DRAINED"
+    c.kill_node("node1")
+    out, man = c.checkpointer.restore(1, lost_nodes=["node1"])
+    np.testing.assert_array_equal(out["layer"]["w"], state["layer"]["w"])
+    np.testing.assert_array_equal(out["ids"], state["ids"])
+    # the replica that served node1's shard really is encoded
+    holder = c.checkpointer.buddy_of("node1")
+    rep_man = c.stores[holder].manifest("replica/node1/ckpt/slot0")
+    assert "wire_codec" in rep_man["meta"]
+
+
+def test_codec_drain_rehydrates_bit_equal(cluster_codec):
+    c = cluster_codec
+    state = _qtree(14)
+    t = c.tiered.save_async(2, state, drain=True)
+    t.result(timeout=30)
+    c.tiered.quiesce()
+    fut = c.scheduler.stage_in("node2", "ckpt_step2_node0",
+                               "staged/shard0")
+    fut.result(timeout=30)
+    staged_man = c.stores["node2"].manifest("staged/shard0")
+    assert staged_man["meta"]["step"] == 2
+    out = c.stores["node2"].get("staged/shard0", verify=True)
+    flat_w = out["layer"]["w"]
+    own = c.stores["node0"].get("ckpt/slot0")["layer"]["w"]
+    np.testing.assert_array_equal(flat_w, own)
+
+
+def test_restore_leaves_partial(cluster):
+    state = _tree(15, n=512)
+    cluster.checkpointer.save(1, state)
+    cluster.checkpointer.wait_async()
+    cluster.tiered.quiesce()
+    out = cluster.checkpointer.restore_leaves(1, ["layer/w"])
+    assert set(out) == {"layer/w"}
+    np.testing.assert_array_equal(out["layer/w"], state["layer"]["w"])
+    with pytest.raises(KeyError):
+        cluster.checkpointer.restore_leaves(1, ["nope"])
+    # partial restore over a lost node rides the replica byte ranges
+    cluster.kill_node("node2")
+    out = cluster.checkpointer.restore_leaves(1, ["ids"],
+                                              lost_nodes=["node2"])
+    np.testing.assert_array_equal(out["ids"], state["ids"])
+
+
+def test_fetch_leaf_home_and_replica_fallback(cluster):
+    obj = {"cache": {"k": np.arange(32, dtype=np.float32)},
+           "pos": np.int32(17)}
+    cluster.tiered.offload("sess", obj).result(timeout=30)
+    cluster.tiered.quiesce()
+    # evict DRAM residency so the read exercises the pmem byte range
+    cluster.tiered.evict_cold(0.0)
+    np.testing.assert_array_equal(
+        cluster.tiered.fetch_leaf("sess", "cache/k"), obj["cache"]["k"])
+    assert int(cluster.tiered.fetch_leaf("sess", "pos")) == 17
+    # home node dies: the leaf comes off the acked replica
+    cluster.kill_node("node0")
+    np.testing.assert_array_equal(
+        cluster.tiered.fetch_leaf("sess", "cache/k"), obj["cache"]["k"])
