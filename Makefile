@@ -6,7 +6,7 @@ PY ?= python
 SHELL := /bin/bash
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test-fast bench lint hygiene repair-smoke daemon-smoke metalog-smoke analyze sanitize-smoke obs-smoke zerocopy-smoke
+.PHONY: verify test-fast bench lint hygiene repair-smoke daemon-smoke metalog-smoke analyze sanitize-smoke obs-smoke zerocopy-smoke serve-smoke
 
 # `time` prefix: suite duration is surfaced wherever verify runs,
 # including the GitHub Actions log (CI calls these targets).
@@ -77,3 +77,12 @@ obs-smoke:
 zerocopy-smoke:
 	$(PY) -m pytest -x -q tests/test_zero_copy.py --pmem-sanitize
 	$(PY) benchmarks/bench_zero_copy.py --smoke
+
+# serve-tier smoke: 64 Zipf-churning sessions as leased catalog
+# datasets; a max_inflight-budgeted repair storm must keep p99 resume
+# latency within 2x the quiet baseline, no live-leased session may ever
+# be evicted/reclaimed, and post-kill resumes must perform zero blind
+# object-store probes (metadata-only recoverability). CI runs this.
+serve-smoke:
+	$(PY) -m pytest -x -q tests/test_serve_sessions.py
+	$(PY) benchmarks/bench_serve.py --smoke

@@ -71,9 +71,10 @@ def main(argv=None) -> None:
     from benchmarks import (bench_checkpoint, bench_io_scaling,
                             bench_kernels, bench_meta_log, bench_obs,
                             bench_repair, bench_repair_daemon,
-                            bench_replication, bench_staging,
-                            bench_tiered_io, bench_tiering,
-                            bench_workflow, bench_zero_copy)
+                            bench_replication, bench_serve,
+                            bench_staging, bench_tiered_io,
+                            bench_tiering, bench_workflow,
+                            bench_zero_copy)
     suites = {
         "io_scaling": bench_io_scaling.run,       # paper Table I
         "checkpoint": bench_checkpoint.run,       # async/delta claims (§V.8)
@@ -87,6 +88,7 @@ def main(argv=None) -> None:
         "meta_log": bench_meta_log.run,           # append vs JSON rewrite
         "obs": bench_obs.run,                     # telemetry-plane overhead
         "zero_copy": bench_zero_copy.run,         # byte-range vs tree path
+        "serve": bench_serve.run,                 # session churn over leases
         "kernels": bench_kernels.run,
     }
     print("name,us_per_call,derived")
@@ -103,7 +105,8 @@ def main(argv=None) -> None:
             traceback.print_exc(file=sys.stderr)
     if args.emit_metrics:
         for mod, out in ((bench_obs, "BENCH_obs.json"),
-                         (bench_zero_copy, "BENCH_zero_copy.json")):
+                         (bench_zero_copy, "BENCH_zero_copy.json"),
+                         (bench_serve, "BENCH_serve.json")):
             if mod.LAST_SNAPSHOT is None:
                 continue
             with open(out, "w") as f:

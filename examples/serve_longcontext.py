@@ -1,5 +1,25 @@
-"""Serving with persistent-memory session state: prefill, decode, spill
-the KV cache to B-APM, 'restart', resume the session bit-exactly.
+"""Fleet serving on persistent memory: two workers share a warm prefix
+dataset, a node dies mid-traffic, and every session resumes from its
+acked replica — bit-exactly, with zero blind object-store probes.
+
+The flow (paper §V-A cross-application sharing, applied to serving):
+
+  1. worker A prefills a shared system prompt ONCE and publishes the KV
+     state as catalog dataset ``prefix/system`` — a named, versioned,
+     replicated Dataset the whole fleet forks from;
+  2. workers A and B each start a user session forked from that prefix
+     (the fork is recorded in the session's lineage) and decode some
+     traffic;
+  3. both sessions are suspended: each becomes a leased version of
+     dataset ``sess/<name>`` — home pmem write + buddy replica acked
+     through the exchange channel;
+  4. a node is killed mid-traffic. ``recoverable_sessions`` answers
+     from catalog records alone which sessions survive (all of them);
+  5. worker B resumes BOTH sessions — including the one worker A
+     created (cross-worker adoption from the catalog record) — off the
+     dead node's acked replicas. A store-read audit shows zero blind
+     probes, and the continuation matches an uninterrupted reference
+     run bit-exactly.
 
     PYTHONPATH=src python examples/serve_longcontext.py
 """
@@ -14,40 +34,106 @@ import numpy as np  # noqa: E402
 
 from repro.configs import registry  # noqa: E402
 from repro.core.cluster import SimCluster  # noqa: E402
+from repro.core.dataset_exchange import ack_targets  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
 from repro.serve.engine import ServeEngine  # noqa: E402
+from repro.serve.sessions import SessionManager  # noqa: E402
+
+
+def _audit_store_reads(cluster):
+    reads = []
+    for nid, st in cluster.stores.items():
+        for meth in ("get_with_manifest", "exists", "get_leaf"):
+            orig = getattr(st, meth)
+
+            def wrapped(name, *a, _orig=orig, _nid=nid, **kw):
+                reads.append((_nid, name))
+                return _orig(name, *a, **kw)
+
+            setattr(st, meth, wrapped)
+    return reads
 
 
 def main():
-    cfg = registry.get_smoke_config("recurrentgemma-9b")  # sub-quadratic
+    cfg = registry.get_smoke_config("qwen2-72b")
     rt = T.ModelRuntime(tp=1, attn_impl="naive", max_seq=128, remat=False)
     params, _ = T.init_params(jax.random.PRNGKey(0), cfg, rt)
-    cluster = SimCluster(Path(tempfile.mkdtemp()), n_nodes=1)
-    store = cluster.stores["node0"]
+    cluster = SimCluster(Path(tempfile.mkdtemp()), n_nodes=3)
 
-    eng = ServeEngine(cfg, rt, params, store=store)
+    # two fleet workers: each has its own engine + session manager, but
+    # they share the SAME catalog (in production: separate processes on
+    # separate hosts over the same replicated pmem catalog records)
+    eng_a = ServeEngine(cfg, rt, params, tiered=cluster.tiered,
+                        label="workerA")
+    eng_b = ServeEngine(cfg, rt, params, tiered=cluster.tiered,
+                        label="workerB")
+    sm_a = cluster.sessions
+    sm_b = SessionManager(cluster.tiered, cluster.catalog,
+                          owner="workerB", obs=cluster.obs)
+
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size, (2, 32)).astype(np.int32)
-    first = eng.prefill(prompts)
-    out = eng.decode(first, 8)
-    print("generated:", out[:, 1:].tolist())
+    system = rng.integers(0, cfg.vocab_size, (1, 24)).astype(np.int32)
+    users = {"alice": int(rng.integers(0, cfg.vocab_size)),
+             "bob": int(rng.integers(0, cfg.vocab_size))}
 
-    eng.spill("session-A")
-    print(f"KV/session state spilled to pmem "
-          f"({store.pool.used_bytes()} bytes persisted)")
+    # 1. shared warm prefix: prefilled once, published for the fleet
+    first = eng_a.prefill(system)
+    rec = sm_a.publish_prefix("system", eng_a)
+    print(f"prefix/system published: v{rec['version']}, "
+          f"{rec['nbytes']} bytes, home {rec['home']}")
 
-    # 'process restart': a brand-new engine resumes from B-APM
-    eng2 = ServeEngine(cfg, rt, params, store=store)
-    eng2.resume("session-A")
-    more = eng2.decode(out[:, -1], 8)
-    print("resumed generation:", more[:, 1:].tolist())
+    # 2. fork one session per user (worker A and worker B), decode a bit
+    outs = {}
+    for (user, tok), (sm, eng) in zip(
+            users.items(), ((sm_a, eng_a), (sm_b, eng_b))):
+        sm.start(user, eng, prefix="system")
+        outs[user] = eng.decode(np.array([tok], np.int32), 6)
+        sm.suspend(user)   # 3. leased dataset sess/<user>, replica acked
+    cluster.tiered.quiesce()
+    for user in users:
+        r = cluster.catalog.record(f"sess/{user}", "serve")
+        print(f"sess/{user}: v{r['version']} home {r['home']} "
+              f"replicas {ack_targets(r['acks'].get('replica'))}")
 
-    # check: an uninterrupted engine produces the identical continuation
+    # 4. a node dies mid-traffic — pick one that homes a session
+    victim = cluster.catalog.record("sess/alice", "serve")["home"]
+    survivors = sm_b.recoverable_sessions([victim])
+    print(f"killing {victim}; catalog says recoverable: {survivors} "
+          f"(zero store probes)")
+    assert survivors == sorted(users), survivors
+    cluster.kill_node(victim)
+
+    # a scheduler can still inspect the cold session at O(leaf) cost:
+    # one byte-range read of the cursor off the acked replica
+    print(f"peek sess/alice pos = {int(sm_b.peek('alice', 'pos'))}")
+
+    # 5. worker B resumes BOTH sessions (alice was worker A's!) off the
+    # replicas, under a store-read audit
+    reads = _audit_store_reads(cluster)
+    for user in users:
+        if cluster.catalog.cache is not None:
+            r = cluster.catalog.record(f"sess/{user}", "serve")
+            cluster.catalog.cache.drop(
+                f"exch/serve/sess/{user}@v{r['version']}")
+        sm_b.resume(user, eng_b)
+        more = eng_b.decode(outs[user][:, -1], 6)
+        outs[user] = np.concatenate([outs[user], more[:, 1:]], axis=1)
+        sm_b.suspend(user)
+    blind = [(n, o) for n, o in reads
+             if not o.endswith(".json") and n != victim
+             and not o.startswith(("replica/", "wf/serve/"))]
+    assert not blind, f"blind probes: {blind}"
+    print(f"both sessions resumed on worker B "
+          f"({len(reads)} audited reads, 0 blind probes)")
+
+    # 6. reference: an uninterrupted engine produces the identical tokens
     ref = ServeEngine(cfg, rt, params)
-    f = ref.prefill(prompts)
-    full = ref.decode(f, 16)
-    assert (full[:, 9:] == more[:, 1:]).all(), "resume diverged!"
-    print("bit-exact resume across 'restart' — OK")
+    for user, tok in users.items():
+        ref.prefill(system)
+        full = ref.decode(np.array([tok], np.int32), 12)
+        assert (full == outs[user]).all(), f"{user} diverged!"
+    print("bit-exact continuation across fork + node loss + "
+          "cross-worker resume — OK")
     cluster.shutdown()
 
 

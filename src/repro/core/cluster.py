@@ -69,6 +69,11 @@ class SimCluster:
                                            tiered=self.tiered,
                                            catalog=self.catalog,
                                            obs=self.obs)
+        # multi-tenant serve tier: sessions as leased catalog datasets
+        # (import here: serve/ sits above core/ in the layer order)
+        from repro.serve.sessions import SessionManager
+        self.sessions = SessionManager(self.tiered, self.catalog,
+                                       obs=self.obs)
 
     def start_repair_daemon(self, **kw):
         """Start the continuous background repair daemon (owned by the

@@ -367,12 +367,21 @@ class DatasetCatalog:
                 producer: Optional[str] = None,
                 inputs: Sequence[Sequence] = (),
                 node: Optional[str] = None, retained: bool = True,
-                replicate: bool = True) -> dict:
+                replicate: bool = True,
+                annotations: Optional[dict] = None,
+                on_replica=None) -> dict:
         """Write a new version of ``name``: bytes to the home node's
         store, record to every live pool, buddy replica (acked) through
         the exchange channel. ``inputs`` are lineage refs —
         ``(name, workflow, version)`` tuples or ``(EXTERNAL_INPUT,
-        external_name, 0)``. Returns the catalog record."""
+        external_name, 0)``. Returns the catalog record.
+
+        ``annotations`` (small JSON dict) persists verbatim in the
+        record — the serve tier stamps its session trace id here so one
+        session's span tree reconnects across process restarts.
+        ``on_replica`` is called (no args, from the replicate task's
+        worker thread) after the buddy replica's ack has been recorded —
+        the serve tier's spill-to-ack latency probe."""
         with self._lock:
             key = (workflow, name)
             v = self._version_cache.get(key)
@@ -395,6 +404,8 @@ class DatasetCatalog:
                         "inputs": [list(ref) for ref in inputs]},
             "leases": {}, "acks": {},
         }
+        if annotations:
+            rec["annotations"] = dict(annotations)
         rname = _rec_name(workflow, name, v)
         # birth record: ONE full JSON write for discovery (versions/
         # records list these files; legacy readers merge them) ...
@@ -411,14 +422,17 @@ class DatasetCatalog:
             self.exchange.submit(
                 home, obj, buddy, version=v,
                 expect_meta={"dataset": name, "version": v},
-                on_ack=self._ack_recorder(workflow, name, v, buddy))
+                on_ack=self._ack_recorder(workflow, name, v, buddy,
+                                          then=on_replica))
         return rec
 
     def _ack_recorder(self, workflow: str, name: str, version: int,
-                      target: str):
+                      target: str, then=None):
         def record(_result) -> None:
             self._append_event(workflow, name, version,
                                {"op": "ack_add", "target": target})
+            if then is not None:
+                then()
         return record
 
     def record_repair_ack(self, workflow: str, name: str, version: int,
@@ -502,6 +516,41 @@ class DatasetCatalog:
         raise KeyError(
             f"dataset {rec['workflow']}/{rec['name']}@v{v}: home {home} "
             f"unreadable and no replica found") from last
+
+    def get_leaf(self, name: str, leaf: str, workflow: str = "default",
+                 version: Optional[int] = None) -> "np.ndarray":
+        """Byte-range read of ONE leaf of a dataset version — a single
+        KV page of a spilled serve session, the ``pos`` cursor — without
+        rehydrating the rest of the tree. The read covers exactly that
+        leaf's bytes (home pool first, then the ACKED replica holders
+        when the home died — never a blind fan-out), decoding only its
+        own tiles when the copy travelled wire-encoded. Nothing is
+        admitted into the DLM cache. Raises ``KeyError`` for a
+        reclaimed dataset or a leaf the object does not carry."""
+        rec = self.record(name, workflow, version)
+        if rec.get("reclaimed"):
+            raise KeyError(f"dataset {workflow}/{name}@v{rec['version']} "
+                           f"was reclaimed")
+        v, obj, home = rec["version"], rec["object"], rec["home"]
+        try:
+            if self.stores[home].exists(obj, v):
+                return self.stores[home].get_leaf(obj, leaf, v)
+        except IOError:
+            pass  # home pool dead — fall through to acked replicas
+        rep = f"replica/{home}/{obj}"
+        last: Optional[Exception] = None
+        for nid in ack_targets((rec.get("acks") or {}).get("replica")):
+            if nid == home:
+                continue
+            try:
+                if self.stores[nid].exists(rep, v):
+                    self.stats["replica_reads"] += 1
+                    return self.stores[nid].get_leaf(rep, leaf, v)
+            except IOError as e:
+                last = e
+        raise KeyError(
+            f"dataset {workflow}/{name}@v{v} leaf {leaf!r}: home {home} "
+            f"unreadable and no acked replica survives") from last
 
     # ---- recoverability (metadata only — the resume contract) ---------
     @metadata_only

@@ -240,6 +240,36 @@ degrades every hook to a no-op or a DRAM-only counter update):
     into the merged timeline; ``analysis/README.md`` documents the
     recording contract and overhead bounds
     (``benchmarks/bench_obs.py`` enforces <5% on the save path).
+
+Serve-tier sessions — leased catalog datasets, not bare keys
+------------------------------------------------------------
+The multi-tenant serve tier (``serve/sessions.py``) stores every
+session's KV/cursor state and every shared prefix cache as a dataset in
+the exchange catalog (``sess/<name>`` / ``prefix/<name>``, workflow
+``serve``), which makes the session durability contract a corollary of
+the dataset one above — no serve-specific machinery:
+
+  * **Spill = publish**: each suspend publishes version N+1 (home
+    chosen by stable hash across live pools; lineage = producing engine
+    + previous version + forked prefix; content digest; buddy replica
+    acked into the record). A session is loss-of-one-node durable
+    exactly when its ack lands (``serve.spill_to_ack_s`` measures the
+    window; the publish itself rides ``run_async`` on the I/O thread so
+    the decode loop never blocks, and ``quiesce`` covers it).
+  * **Liveness = lease**: the manager holds a lease on the latest
+    version of every live session; ``catalog.gc`` therefore can never
+    reclaim one (acquire's under-lock reclaimed check closes the
+    acquire/gc race), and the DLM cache's lease-pinned admission
+    (``DLMCache.protected``) keeps leased sessions DRAM-resident under
+    capacity pressure. Eviction of a cold session is a LEASE RELEASE —
+    a metadata write — never byte deletion; ``end()`` unretains every
+    version and lets the next gc sweep reclaim the bytes (records and
+    lineage survive).
+  * **Recovery = records**: ``recoverable_sessions(lost)`` and the
+    eviction choice are ``@metadata_only`` (lint-enforced); post-kill
+    resumes read the home or an ACKED replica holder — zero blind
+    probes — and session repair rides the existing catalog-record scan
+    of ``RepairChannel``/``RepairDaemon`` with zero new scan code.
 """
 from __future__ import annotations
 
@@ -1266,6 +1296,16 @@ class TieredIO:
     def _submit(self, fn) -> Future:
         return self._io.submit(fn)  # raises RuntimeError after shutdown
 
+    def run_async(self, fn) -> Future:
+        """Run ``fn`` on the engine's FIFO I/O thread, tracked like an
+        offload: ``quiesce``/``join`` cover the returned future, so a
+        crash-time drain never strands it. The serve tier's nonblocking
+        session spill (a catalog ``publish`` that must not stall the
+        decode loop) rides this hook."""
+        fut = self._submit(fn)
+        self._track_future(fut)
+        return fut
+
     def _track_future(self, fut: Future) -> None:
         with self._lock:
             self._prune_done_locked()
@@ -1280,6 +1320,11 @@ class TieredIO:
         catalog.exchange = self.exchange
         if self.cache is not None:
             catalog.cache = self.cache
+            if self.cache.protected is None:
+                # lease-pinned admission: capacity-pressure LRU never
+                # evicts a dataset someone holds a live lease on (serve
+                # sessions mid-request, workflow consumers mid-lease)
+                self.cache.protected = catalog.leased_cache_keys
 
     # ---- checkpoint channel ------------------------------------------
     def save_async(self, step: int, tree, *,

@@ -125,11 +125,23 @@ class DLMCache:
     def __init__(self, store: PMemObjectStore, capacity_bytes: int,
                  fallback_reader: Optional[Callable[[str], Any]] = None,
                  on_writeback: Optional[Callable[[str], None]] = None,
+                 protected: Optional[Callable[[], Container[str]]] = None,
                  obs=None):
         from repro.obs.metrics import Registry
         self.store = store
         self.capacity = capacity_bytes
         self.fallback_reader = fallback_reader
+        # lease-pinned admission: a callable returning the names that
+        # capacity-pressure LRU eviction must skip (TieredIO wires the
+        # catalog's actively-leased cache keys here, so admitting a new
+        # object never pushes a mid-lease consumer's — or a live serve
+        # session's — working set out of DRAM). ``evict_cold`` has its
+        # own explicit ``keep`` parameter; this guards the implicit
+        # evictions ``put``/``admit``/``get`` perform under pressure.
+        # When every resident entry is protected the admission proceeds
+        # over budget (like the oversized bypass, pressure is visible in
+        # ``dlm.used_bytes``) rather than evicting a pinned entry.
+        self.protected = protected
         # called with the object name after every durable write-back to
         # pmem (dirty eviction, flush, oversized bypass). TieredIO wires
         # it to queue a buddy replica + ack, so the replica tier tracks
@@ -200,8 +212,15 @@ class DLMCache:
         self._counters["evictions"].inc()
 
     def _evict_until_fits(self, incoming: int) -> None:
+        pinned: Container[str] = ()
+        if self.protected is not None:
+            pinned = self.protected() or ()
         while self._cache and self._used + incoming > self.capacity:
-            self._evict_one(next(iter(self._cache)))  # LRU head
+            victim = next((n for n in self._cache if n not in pinned),
+                          None)  # LRU order, pinned entries skipped
+            if victim is None:
+                return  # everything resident is pinned: admit over budget
+            self._evict_one(victim)
 
     def _drop_stale(self, name: str) -> None:
         """Remove a superseded entry WITHOUT write-back (the caller is

@@ -1,18 +1,23 @@
-"""Serving engine: prefill + batched decode with pmem KV spill (SLM mode).
+"""Per-request serving engine: prefill + batched decode (SLM mode).
 
-The engine drives models/transformer's prefill/decode with jitted steps.
-Idle or preempted sequences' KV caches can be *spilled* to the node's
-B-APM and resumed later — long-context serving state outlives DRAM
-pressure and even process restarts, which is precisely the paper's
-persistent-memory serving story.
+The engine drives models/transformer's prefill/decode with jitted steps
+and owns exactly ONE session's DRAM state (``cache``/``pos``) at a time.
+Session *lifetime* — who may spill, resume, share, evict or reclaim that
+state — is the SessionManager's job (``serve/sessions.py``): a fleet of
+these engines checks sessions in and out of the manager, which registers
+every spill as a leased, versioned Dataset in the exchange catalog.
 
-Two spill paths:
+The legacy direct spill paths on this class survive for single-engine
+use and tests:
   * legacy direct-store (``store=``): synchronous object-store put/get;
   * TieredIO (``tiered=``): spill goes through the DLM write-back cache
     on the engine's I/O thread (nonblocking), and ``prefetch_sessions``
     warms cold session/KV state from pmem into DRAM *before* the next
     request needs it — the scheduler-driven cold-page prefetch of the
     paper's Fig. 8.
+New serving code should go through the SessionManager instead: it rides
+the catalog's leases, acks and repair instead of bare ``serve/<name>``
+keys.
 """
 from __future__ import annotations
 
@@ -29,27 +34,75 @@ from repro.core.tiered_io import TieredIO
 from repro.models import transformer as tfm
 
 
+class SpillTicket:
+    """Future-like handle for a nonblocking ``ServeEngine.spill``.
+
+    The ticket OWNS the host copy of the session state until the pmem
+    write is durable: a failed offload parks the copy in
+    ``engine.failed_spills[name]`` (instead of silently losing the
+    session with ``engine.cache`` already freed) and ``result()`` raises
+    a ``RuntimeError`` naming the session, chained on the real cause.
+    ``restore_failed_spill`` re-installs the parked copy."""
+
+    def __init__(self, name: str, state: dict, future,
+                 engine: "ServeEngine"):
+        self.name = name
+        self._state = state
+        self._future = future
+        self._engine = engine
+        future.add_done_callback(self._on_done)
+
+    def _on_done(self, fut) -> None:
+        if fut.exception() is not None:
+            # the spill never became durable: the host copy goes back
+            # to the engine so the session is not lost
+            self._engine.failed_spills[self.name] = self._state
+        self._state = None  # durable (or parked): ticket drops its ref
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def exception(self, timeout: Optional[float] = None):
+        return self._future.exception(timeout)
+
+    def result(self, timeout: Optional[float] = None):
+        try:
+            return self._future.result(timeout)
+        except Exception as e:  # noqa: BLE001 — re-raised with context
+            raise RuntimeError(
+                f"spill of session {self.name!r} never became durable; "
+                f"host copy retained in "
+                f"ServeEngine.failed_spills[{self.name!r}]") from e
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, rt: tfm.ModelRuntime, params,
                  store: Optional[PMemObjectStore] = None,
-                 tiered: Optional[TieredIO] = None):
+                 tiered: Optional[TieredIO] = None,
+                 label: str = "engine0"):
         self.cfg = cfg
         self.rt = rt
         self.params = params
         self.store = store
         self.tiered = tiered
+        self.label = label  # producer id stamped into session lineage
         self.cache = None
         self.pos = 0
+        # host copies of spills that failed after ``cache`` was freed
+        # (see SpillTicket): {session name: state dict}
+        self.failed_spills: Dict[str, dict] = {}
         self._decode = jax.jit(
             lambda p, c, t, pos: tfm.decode_step(p, cfg, rt, c, t, pos))
         self._prefill = jax.jit(
-            functools.partial(tfm.prefill, cfg=cfg, rt=rt),
-            static_argnames=())
+            functools.partial(tfm.prefill, cfg=cfg, rt=rt))
 
     # ---- lifecycle ----
     def prefill(self, tokens: np.ndarray, **frontend) -> np.ndarray:
-        logits, cache = tfm.prefill(self.params, self.cfg, self.rt,
-                                    jnp.asarray(tokens), **frontend)
+        # cfg/rt are baked into the jitted partial; tokens must go by
+        # keyword (positionally it would collide with the bound cfg)
+        logits, cache = self._prefill(self.params,
+                                      tokens=jnp.asarray(tokens),
+                                      **frontend)
         self.cache = cache
         self.pos = tokens.shape[1] + self.cfg.prefix_len
         return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
@@ -65,20 +118,45 @@ class ServeEngine:
             out.append(np.asarray(toks))
         return np.stack(out, axis=1)
 
+    # ---- session-state handoff (the SessionManager's interface) ----
+    def export_state(self, release: bool = False) -> dict:
+        """Host copy of the session state (``{"cache", "pos"}``) —
+        what the manager publishes as a dataset version. ``release``
+        frees the engine's DRAM copy after the export."""
+        assert self.cache is not None, "no session state resident"
+        host = jax.tree.map(np.asarray, self.cache)
+        obj = {"cache": host, "pos": np.int32(self.pos)}
+        if release:
+            self.cache = None
+        return obj
+
+    def install_state(self, obj: dict) -> None:
+        """Adopt a session state tree (from a resume, a shared prefix
+        dataset, or a parked failed spill)."""
+        self.cache = jax.tree.map(jnp.asarray, obj["cache"])
+        self.pos = int(obj["pos"])
+
+    def restore_failed_spill(self, name: str) -> None:
+        """Re-install the host copy a failed nonblocking spill parked
+        (see SpillTicket) — the in-process recovery for a spill whose
+        pmem write died under it."""
+        self.install_state(self.failed_spills.pop(name))
+
     # ---- pmem spill (SLM): persist serving state, restore later ----
     def spill(self, name: str, wait: bool = True, replicate: bool = True):
         """Persist the session's KV/cursor to pmem and free DRAM. With a
         TieredIO engine attached the write happens off-thread; pass
-        ``wait=False`` to get the future instead of blocking. With
-        ``replicate`` (default) the spilled state also gets a buddy-node
-        replica over the fabric, so ``resume``/``prefetch_sessions``
-        keep working when the home node's pool dies (the TieredIO DLM
-        cache transparently falls back to ``replica/<nid>/...``)."""
+        ``wait=False`` to get a ``SpillTicket`` instead of blocking —
+        the ticket owns the host copy until the write is durable, so a
+        failed offload parks it in ``failed_spills`` rather than losing
+        the session. With ``replicate`` (default) the spilled state also
+        gets a buddy-node replica over the fabric, so ``resume``/
+        ``prefetch_sessions`` keep working when the home node's pool
+        dies (the TieredIO DLM cache transparently falls back to
+        ``replica/<nid>/...``)."""
         assert self.tiered is not None or self.store is not None, \
             "no pmem backend attached"  # check BEFORE dropping the KV
-        host = jax.tree.map(np.asarray, self.cache)
-        obj = {"cache": host, "pos": np.int32(self.pos)}
-        self.cache = None  # DRAM freed
+        obj = self.export_state(release=True)
         obs = self._obs()
         if obs is not None:
             obs.counter("serve.spills").inc()
@@ -89,7 +167,7 @@ class ServeEngine:
             if wait:
                 fut.result()
                 return None
-            return fut
+            return SpillTicket(name, obj, fut, self)
         self.store.put(f"serve/{name}", obj)
         return None
 
@@ -107,8 +185,7 @@ class ServeEngine:
         else:
             assert self.store is not None
             obj = self.store.get(f"serve/{name}")
-        self.cache = jax.tree.map(jnp.asarray, obj["cache"])
-        self.pos = int(obj["pos"])
+        self.install_state(obj)
         if obs is not None:
             obs.counter("serve.resumes").inc()
             obs.end(sp)
@@ -133,7 +210,9 @@ class ServeEngine:
         return self.tiered.prefetch([f"serve/{n}" for n in names])
 
     def evict_cold_sessions(self, max_idle_s: float = 0.0) -> int:
-        """Spill idle cached sessions back to pmem (DRAM pressure valve)."""
+        """Spill idle cached sessions back to pmem (DRAM pressure valve).
+        The SessionManager's lease-release eviction supersedes this for
+        catalog-registered sessions."""
         assert self.tiered is not None, "eviction needs a TieredIO engine"
         n = self.tiered.evict_cold(max_idle_s)
         obs = self._obs()
